@@ -1,0 +1,39 @@
+"""Shared helpers for the paper-experiment benchmarks."""
+from __future__ import annotations
+
+import random
+from typing import Dict, List
+
+from repro.core.cluster import paper_cluster
+from repro.core.profiles import PAPER_BENCHMARKS
+from repro.core.scenarios import SCENARIOS
+from repro.core.simulator import Simulator
+
+SIX = ("NONE", "CM", "CM_S", "CM_G", "CM_S_TG", "CM_G_TG")
+
+
+def exp2_submissions(seed: int = 7):
+    """20 jobs: 4x each of the 5 benchmarks, random order, submit 0..1200s."""
+    rng = random.Random(seed)
+    jobs = [w for w in PAPER_BENCHMARKS.values() for _ in range(4)]
+    rng.shuffle(jobs)
+    times = sorted(rng.uniform(0, 1200) for _ in jobs)
+    return list(zip(jobs, times))
+
+
+def run_scenario(name: str, subs, seed: int = 0):
+    sim = Simulator(paper_cluster(), SCENARIOS[name], seed=seed)
+    return sim.run(list(subs))
+
+
+def seed_avg(name: str, subs, n_seeds: int = 5) -> Dict[str, float]:
+    resp = mk = 0.0
+    rts: Dict[str, List[float]] = {}
+    for seed in range(n_seeds):
+        done = run_scenario(name, subs, seed=seed)
+        resp += Simulator.overall_response(done) / n_seeds
+        mk += Simulator.makespan(done) / n_seeds
+        for j in done:
+            rts.setdefault(j.job.name, []).append(j.running_time)
+    avg_rt = {k: sum(v) / len(v) for k, v in rts.items()}
+    return {"response": resp, "makespan": mk, "runtimes": avg_rt}

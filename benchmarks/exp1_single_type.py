@@ -1,0 +1,47 @@
+"""Experiment 1 (paper Figs. 4-5): 10 EP-DGEMM jobs, 60 s arrival interval.
+
+Reports average job running time and overall response time for the six
+scenarios, plus improvement percentages vs CM / NONE (paper: CM_S* -5%/-26%,
+CM_G* -15%/-34%).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.profiles import PAPER_BENCHMARKS
+
+from benchmarks.common import SIX, run_scenario, seed_avg
+from repro.core.simulator import Simulator
+
+
+def submissions():
+    return [(PAPER_BENCHMARKS["EP-DGEMM"], 60.0 * i) for i in range(10)]
+
+
+def run(csv_rows=None):
+    subs = submissions()
+    out = {}
+    for scn in SIX:
+        t0 = time.time()
+        r = seed_avg(scn, subs, n_seeds=5)
+        out[scn] = r
+        rt = r["runtimes"]["EP-DGEMM"]
+        row = (f"exp1_{scn}", (time.time() - t0) * 1e6 / 5,
+               f"resp={r['response']:.0f};avg_rt={rt:.1f}")
+        if csv_rows is not None:
+            csv_rows.append(row)
+    print("\n== Experiment 1: 10x EP-DGEMM (Figs. 4-5) ==")
+    print(f"{'scenario':9s} {'avg_runtime_s':>13s} {'overall_resp_s':>15s}"
+          f" {'vs CM':>8s} {'vs NONE':>8s}")
+    for scn in SIX:
+        r = out[scn]
+        vs_cm = 1 - r["response"] / out["CM"]["response"]
+        vs_none = 1 - r["response"] / out["NONE"]["response"]
+        print(f"{scn:9s} {r['runtimes']['EP-DGEMM']:13.1f} "
+              f"{r['response']:15.0f} {vs_cm:8.1%} {vs_none:8.1%}")
+    print("paper:    CM_S* -5%/-26%, CM_G* -15%/-34% (response vs CM/NONE)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

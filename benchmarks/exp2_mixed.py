@@ -1,0 +1,58 @@
+"""Experiment 2 (paper Figs. 6-7): 20 mixed jobs over the six scenarios.
+
+Per-type average running time (Fig. 6's five panels), overall response time
+(Fig. 6 last panel), and makespan (Fig. 7); improvements vs CM / NONE with
+the paper's claims alongside.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SIX, exp2_submissions, seed_avg
+
+PAPER_CLAIMS = {
+    "CM_S_TG": {"resp_cm": 0.16, "resp_none": 0.32, "mk_cm": 0.01,
+                "mk_none": 0.26},
+    "CM_G_TG": {"resp_cm": 0.19, "resp_none": 0.35, "mk_cm": 0.11,
+                "mk_none": 0.34},
+}
+
+
+def run(csv_rows=None):
+    subs = exp2_submissions()
+    out = {}
+    for scn in SIX:
+        t0 = time.time()
+        out[scn] = seed_avg(scn, subs, n_seeds=5)
+        if csv_rows is not None:
+            csv_rows.append((f"exp2_{scn}", (time.time() - t0) * 1e6 / 5,
+                             f"resp={out[scn]['response']:.0f};"
+                             f"mk={out[scn]['makespan']:.0f}"))
+    print("\n== Experiment 2: 20 mixed jobs (Figs. 6-7) ==")
+    names = sorted(out["NONE"]["runtimes"])
+    hdr = " ".join(f"{n[:9]:>10s}" for n in names)
+    print(f"{'scenario':9s} {hdr} {'resp_s':>9s} {'mkspan_s':>9s}")
+    for scn in SIX:
+        r = out[scn]
+        rts = " ".join(f"{r['runtimes'][n]:10.1f}" for n in names)
+        print(f"{scn:9s} {rts} {r['response']:9.0f} {r['makespan']:9.0f}")
+    print("\nimprovements (this repro vs paper):")
+    for scn, c in PAPER_CLAIMS.items():
+        r = out[scn]
+        print(f"  {scn}: resp vs CM "
+              f"{1 - r['response']/out['CM']['response']:+.1%} "
+              f"(paper -{c['resp_cm']:.0%}), vs NONE "
+              f"{1 - r['response']/out['NONE']['response']:+.1%} "
+              f"(paper -{c['resp_none']:.0%}); makespan vs CM "
+              f"{1 - r['makespan']/out['CM']['makespan']:+.1%} "
+              f"(paper -{c['mk_cm']:.0%}), vs NONE "
+              f"{1 - r['makespan']/out['NONE']['makespan']:+.1%} "
+              f"(paper -{c['mk_none']:.0%})")
+    st = 1 - out["CM_S_TG"]["runtimes"]["EP-STREAM"] \
+        / out["CM_S"]["runtimes"]["EP-STREAM"]
+    print(f"  STREAM runtime CM_S_TG vs CM_S: {st:+.1%} (paper -33%)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Experiment 3 (paper Figs. 8-9, Table III): framework comparison.
+
+Kubeflow MPI-operator-like (single worker, default scheduler), native
+Volcano (one process per container, spread), and our CM / CM_S_TG / CM_G_TG.
+Single executions, same submissions as Experiment 2 (paper methodology).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import exp2_submissions, run_scenario
+from repro.core.simulator import Simulator
+
+TABLE3 = {"Kubeflow": 2520, "Volcano": 123055, "CM": 2529,
+          "CM_S_TG": 2498, "CM_G_TG": 2258}
+
+
+def run(csv_rows=None):
+    subs = exp2_submissions()
+    out = {}
+    for scn in TABLE3:
+        t0 = time.time()
+        done = run_scenario(scn, subs, seed=7)
+        out[scn] = {
+            "makespan": Simulator.makespan(done),
+            "response": Simulator.overall_response(done),
+            "jobs": {j.job.name: j.running_time for j in done},
+        }
+        if csv_rows is not None:
+            csv_rows.append((f"exp3_{scn}", (time.time() - t0) * 1e6,
+                             f"mk={out[scn]['makespan']:.0f}"))
+    print("\n== Experiment 3: framework comparison (Table III) ==")
+    print(f"{'scenario':9s} {'makespan_s':>11s} {'paper_s':>9s} {'delta':>7s}")
+    for scn, paper in TABLE3.items():
+        mk = out[scn]["makespan"]
+        print(f"{scn:9s} {mk:11.0f} {paper:9d} {mk/paper - 1:7.1%}")
+    print("\nper-job response time (Fig. 9, seconds):")
+    for scn in ("Kubeflow", "Volcano", "CM_G_TG"):
+        done = run_scenario(scn, subs, seed=7)
+        resp = sorted(j.response_time for j in done)
+        print(f"  {scn:9s} min={resp[0]:7.0f} p50={resp[10]:8.0f} "
+              f"max={resp[-1]:9.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json (produced by ``python -m repro.launch.dryrun
+--all --both-meshes``) and prints the per-cell three-term roofline, dominant
+bottleneck, MODEL/HLO useful-FLOPs ratio, and the measured profile
+classification that feeds Algorithm 1.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.profiles import classify_roofline
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load(variant="baseline"):
+    rows = []
+    skips = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*__{variant}.json"))):
+        r = json.load(open(f))
+        if r.get("skipped"):
+            skips.append(r)
+            continue
+        if not r.get("ok"):
+            continue
+        rows.append(r)
+    return rows, skips
+
+
+def run(csv_rows=None, variant="baseline"):
+    rows, skips = load(variant)
+    if not rows:
+        print(f"\n== Roofline: no dry-run artifacts under {RESULTS} ==")
+        print("   run: PYTHONPATH=src python -m repro.launch.dryrun --all "
+              "--both-meshes")
+        return
+    print(f"\n== Roofline ({variant}; {len(rows)} compiled cells, "
+          f"{len(skips)} documented skips) ==")
+    print(f"{'arch':24s} {'shape':12s} {'mesh':8s} {'c_ms':>8s} {'m_ms':>8s}"
+          f" {'n_ms':>9s} {'dominant':>10s} {'useful':>6s} {'rl_frac':>7s}"
+          f" {'profile':>8s} fits")
+    for r in rows:
+        rl = r["roofline"]
+        prof = classify_roofline(rl["compute_s"], rl["memory_s"],
+                                 rl["collective_s"])
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{rl['compute_s']*1e3:8.2f} {rl['memory_s']*1e3:8.2f} "
+              f"{rl['collective_s']*1e3:9.2f} {rl['dominant']:>10s} "
+              f"{rl['useful_ratio']:6.2f} {rl['roofline_fraction']:7.3f} "
+              f"{prof.value:>8s} "
+              f"{r['memory_analysis']['fits_16GiB']}")
+        if csv_rows is not None:
+            csv_rows.append((
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                rl["step_time_s"] * 1e6,
+                f"dom={rl['dominant']};frac={rl['roofline_fraction']:.3f}"))
+    if skips:
+        print("\ndocumented skips:")
+        seen = set()
+        for s in skips:
+            key = (s["arch"], s["shape"])
+            if key in seen:
+                continue
+            seen.add(key)
+            print(f"  {s['arch']:24s} {s['shape']:12s} {s['reason']}")
+    _print_variants(csv_rows)
+
+
+def _print_variants(csv_rows=None):
+    """§Perf: baseline vs hillclimb/planner variants, per cell."""
+    import collections
+    cells = collections.defaultdict(dict)
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        r = json.load(open(f))
+        if r.get("skipped") or not r.get("ok"):
+            continue
+        cells[(r["arch"], r["shape"], r["mesh"])][r["variant"]] = \
+            r["roofline"]["roofline_fraction"]
+    rows = [(k, v) for k, v in cells.items() if len(v) > 1]
+    if not rows:
+        return
+    print("\n== §Perf variants (roofline fraction, baseline -> variants) ==")
+    for (a, sh, m), v in sorted(rows):
+        base = v.get("baseline", 0.0)
+        var_s = "  ".join(f"{name}={frac:.3f}"
+                          for name, frac in sorted(v.items())
+                          if name != "baseline")
+        best = max(v.values())
+        gain = best / base if base else float("inf")
+        print(f"  {a} x {sh} @ {m}: baseline={base:.3f}  {var_s}"
+              f"  (best {gain:.1f}x)")
+        if csv_rows is not None:
+            csv_rows.append((f"perf_{a}_{sh}_{m}", 0.0,
+                             f"base={base:.3f};best={best:.3f}"))
+
+
+if __name__ == "__main__":
+    run()

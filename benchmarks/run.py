@@ -1,0 +1,31 @@
+"""Benchmark harness: one entry per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
+
+  python -m benchmarks.run [--only exp1|exp2|exp3|sched|roofline]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    csv_rows = []
+    from benchmarks import (backfill, exp1_single_type, exp2_mixed,
+                            exp3_frameworks, roofline, sched_efficiency)
+    jobs = {"exp1": exp1_single_type.run, "exp2": exp2_mixed.run,
+            "exp3": exp3_frameworks.run, "sched": sched_efficiency.run,
+            "backfill": backfill.run, "roofline": roofline.run}
+    for name, fn in jobs.items():
+        if args.only and args.only != name:
+            continue
+        fn(csv_rows)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

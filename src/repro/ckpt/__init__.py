@@ -1,0 +1,2 @@
+"""Atomic/async/elastic sharded checkpointing."""
+from repro.ckpt.checkpoint import latest_step, restore, save, save_async

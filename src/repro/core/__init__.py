@@ -1,0 +1,23 @@
+"""The paper's contribution: two-layer fine-grained scheduling.
+
+Application layer: ``planner`` (Algorithm 1 — granularity selection from the
+job profile).  Infrastructure layer: ``controller`` (Algorithm 2 — MPI-aware
+task->worker mapping, resources, hostfile), ``taskgroup`` (Algorithms 3+4 —
+balanced groups with node affinity/anti-affinity scoring), gang admission in
+``simulator``.  ``meshplan`` binds the same decisions to JAX meshes/sharding
+for real jobs; ``simulator``+``scenarios`` reproduce the paper's evaluation.
+"""
+from repro.core.cluster import Cluster, Node, fleet_cluster, paper_cluster
+from repro.core.controller import allocate_tasks, hostfile, make_workers
+from repro.core.planner import Granularity, select_granularity
+from repro.core.profiles import (PAPER_BENCHMARKS, Profile, Workload,
+                                 classify_roofline)
+from repro.core.scenarios import SCENARIOS, get_scenario
+from repro.core.simulator import PerfParams, Scenario, Simulator
+from repro.core import taskgroup
+
+__all__ = ["Cluster", "Node", "fleet_cluster", "paper_cluster",
+           "allocate_tasks", "hostfile", "make_workers", "Granularity",
+           "select_granularity", "PAPER_BENCHMARKS", "Profile", "Workload",
+           "classify_roofline", "SCENARIOS", "get_scenario", "PerfParams",
+           "Scenario", "Simulator", "taskgroup"]

@@ -1,0 +1,82 @@
+"""Cluster model: nodes with slots and locality domains.
+
+One model serves two instantiations:
+
+* **paper mode** — the evaluation platform of the paper: 4 worker nodes,
+  2 NUMA sockets each, 32 usable cores (16/socket), 1 GbE between nodes.
+* **fleet mode** — the production TPU target: v5e pods of 256 chips
+  (64 hosts × 4 chips), ICI within a pod, DCN between pods; a "node" is a
+  host, a "slot" is a chip, a "domain" is the host's ICI reach.
+
+The scheduler algorithms (planner / controller / task-group) are agnostic to
+which instantiation they run on — exactly the paper's layering claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Node:
+    name: str
+    n_slots: int                 # usable cores (paper) / chips (fleet)
+    n_domains: int = 2           # NUMA sockets / intra-host ICI groups
+    pod: int = 0                 # DCN domain (fleet); 0 = single pod
+    used: int = 0
+    domain_used: list = None     # cores pinned per domain (affinity mode)
+
+    def __post_init__(self):
+        if self.domain_used is None:
+            self.domain_used = [0] * self.n_domains
+
+    @property
+    def free(self) -> int:
+        return self.n_slots - self.used
+
+    @property
+    def domain_capacity(self) -> int:
+        return self.n_slots // self.n_domains
+
+    def domain_free(self, d: int) -> int:
+        return self.domain_capacity - self.domain_used[d]
+
+
+@dataclasses.dataclass
+class Cluster:
+    nodes: List[Node]
+    intra_bw: float = 1.0        # relative fast-domain bandwidth
+    inter_bw: float = 0.02       # relative cross-node bandwidth (1GbE/ICI)
+    cross_pod_bw: float = 0.004  # relative DCN bandwidth (fleet)
+
+    def node(self, name: str) -> Node:
+        return next(n for n in self.nodes if n.name == name)
+
+    @property
+    def total_slots(self) -> int:
+        return sum(n.n_slots for n in self.nodes)
+
+    @property
+    def free_slots(self) -> int:
+        return sum(n.free for n in self.nodes)
+
+    def fits(self, demand_per_node: Dict[str, int]) -> bool:
+        return all(self.node(n).free >= d
+                   for n, d in demand_per_node.items())
+
+
+def paper_cluster() -> Cluster:
+    """The paper's platform: 4 worker nodes x 32 usable cores, 2 sockets."""
+    return Cluster([Node(f"node{i}", n_slots=32, n_domains=2)
+                    for i in range(4)])
+
+
+def fleet_cluster(n_pods: int = 2, hosts_per_pod: int = 64,
+                  chips_per_host: int = 4) -> Cluster:
+    """Production TPU fleet: v5e-style pods (the multi-pod dry-run mesh)."""
+    nodes = []
+    for p in range(n_pods):
+        for h in range(hosts_per_pod):
+            nodes.append(Node(f"pod{p}-host{h}", n_slots=chips_per_host,
+                              n_domains=1, pod=p))
+    return Cluster(nodes, intra_bw=1.0, inter_bw=0.6, cross_pod_bw=0.05)

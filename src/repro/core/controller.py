@@ -1,0 +1,50 @@
+"""Algorithm 2 — Dynamic MPI-aware Job Controller.
+
+Round-robin allocation of the N_t tasks onto the N_w workers, per-worker
+resource requests proportional to their task count (R/N_t · nTasks), and the
+hostfile (worker -> slots) that the MPI launcher consumes.  In fleet mode
+"tasks" are model shards and the hostfile is the shard->chip assignment
+table the mesh builder consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.core.planner import Granularity
+from repro.core.profiles import Workload
+
+
+@dataclasses.dataclass
+class WorkerSpec:
+    job: str
+    index: int
+    n_tasks: int                  # slots in the hostfile entry
+    cpu: float                    # resource request (R/N_t * nTasks)
+    memory: float
+    group: int = -1               # assigned later by task-group scheduling
+    node: str = ""                # assigned by the scheduler
+    domains: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # ^ NUMA-socket pinning (tasks per domain), set at admission
+
+
+def allocate_tasks(n_tasks: int, n_workers: int) -> List[int]:
+    """RoundRobin task->worker counts (step 2 of Algorithm 2)."""
+    base = n_tasks // n_workers
+    extra = n_tasks % n_workers
+    return [base + (1 if i < extra else 0) for i in range(n_workers)]
+
+
+def make_workers(job: Workload, gran: Granularity,
+                 cpu_per_task: float = 1.0,
+                 mem_per_task: float = 1.0) -> List[WorkerSpec]:
+    """Steps 1-3 of Algorithm 2: build worker pods with resources."""
+    counts = allocate_tasks(gran.n_tasks, gran.n_workers)
+    return [WorkerSpec(job=job.name, index=i, n_tasks=c,
+                       cpu=cpu_per_task * c, memory=mem_per_task * c)
+            for i, c in enumerate(counts) if c > 0]
+
+
+def hostfile(workers: List[WorkerSpec]) -> Dict[str, int]:
+    """'hostname slots=nTasks' lines, keyed by worker pod name."""
+    return {f"{w.job}-worker-{w.index}": w.n_tasks for w in workers}

@@ -1,0 +1,41 @@
+"""The paper's six evaluation scenarios (Table II) + framework baselines.
+
+| scenario  | Kubelet      | Scanflow (Alg 1)       | Volcano                 |
+|-----------|--------------|------------------------|-------------------------|
+| NONE      | default      | —                      | default (gang)          |
+| CM        | cpu/mem aff. | —                      | default (gang)          |
+| CM_S      | cpu/mem aff. | 'scale'                | default (gang)          |
+| CM_G      | cpu/mem aff. | 'granularity'          | default (gang)          |
+| CM_S_TG   | cpu/mem aff. | 'scale'                | gang + task-group       |
+| CM_G_TG   | cpu/mem aff. | 'granularity'          | gang + task-group       |
+
+Framework baselines (Experiment 3): Kubeflow MPI operator (single worker,
+default scheduler, CM affinity) ~= CM; native Volcano (one process per
+container, spread, no granularity awareness).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.simulator import Scenario
+
+SCENARIOS: Dict[str, Scenario] = {
+    "NONE": Scenario("NONE", affinity=False, policy=None, taskgroup=False),
+    "CM": Scenario("CM", affinity=True, policy=None, taskgroup=False),
+    "CM_S": Scenario("CM_S", affinity=True, policy="scale", taskgroup=False),
+    "CM_G": Scenario("CM_G", affinity=True, policy="granularity",
+                     taskgroup=False),
+    "CM_S_TG": Scenario("CM_S_TG", affinity=True, policy="scale",
+                        taskgroup=True),
+    "CM_G_TG": Scenario("CM_G_TG", affinity=True, policy="granularity",
+                        taskgroup=True),
+    # Experiment 3 framework baselines
+    "Kubeflow": Scenario("Kubeflow", affinity=True, policy=None,
+                         taskgroup=False),
+    "Volcano": Scenario("Volcano", affinity=True, policy=None,
+                        taskgroup=False, force_split=True),
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    return SCENARIOS[name]

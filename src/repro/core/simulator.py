@@ -1,0 +1,378 @@
+"""Progress-based discrete-event cluster simulator.
+
+Jobs are admitted gang-atomically (Volcano semantics), placed by either the
+default scheduler (least-allocated, random tie-break — Kubernetes default
+behaviour per the paper) or the task-group scheduler (Algorithms 3+4), and
+executed under a placement- and contention-aware speed model:
+
+* speeds are re-evaluated at every event (start/finish), so interference is
+  time-varying: a STREAM job slows down only while co-located with other
+  memory-bound work (progress-based simulation);
+* the job's remaining work advances piecewise-linearly between events.
+
+The speed model's mechanisms mirror the paper's measured effects:
+CPU-bound: migration/affinity penalties shrinking with finer granularity
+(cgroup-level scheduling); memory-bound: per-node bandwidth saturation (the
+balance-sensitive effect task-grouping fixes); network-bound: inter-node and
+multi-container communication penalties (the effect granularity policies
+avoid by keeping such jobs coarse).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional
+
+from repro.core.cluster import Cluster
+from repro.core.controller import WorkerSpec, make_workers
+from repro.core.planner import Granularity, select_granularity
+from repro.core.profiles import Profile, Workload
+from repro.core import taskgroup as TG
+
+
+# --------------------------------------------------------------------------
+# calibrated performance model (anchored to the paper's Figs. 4-9/Table III;
+# see benchmarks/exp*_*.py and tests/test_repro_claims.py)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PerfParams:
+    # CPU-bound multiplicative penalty by (affinity, tasks-per-worker bucket)
+    cpu_no_affinity: float = 1.45
+    cpu_affinity_coarse: float = 1.18      # >= 8 tasks per container
+    cpu_affinity_mid: float = 1.12         # 2..7 tasks per container
+    cpu_affinity_fine: float = 1.00        # 1 task per container
+    # memory-bound bandwidth saturation (node level: sockets share the
+    # memory controllers' aggregate under interleaved allocations)
+    mem_bw_tasks: float = 13.0             # mem tasks/node at full speed
+    mem_no_affinity: float = 1.32          # remote-access penalty without CM
+    mem_sat_exp: float = 1.4               # convexity of the saturation curve
+    # network-bound
+    net_internode: float = 42.0            # per extra node (1 GbE vs shm)
+    net_multiworker: float = 1.6           # >1 container even on one node
+    # shared-scheduler noise: extra penalty per co-located job w/o affinity
+    share_no_affinity: float = 0.05
+    share_cap: int = 4
+    # granularity benefit also applies (weakly) to the memory class
+    mem_affinity_coarse: float = 1.10
+    mem_affinity_mid: float = 1.05
+    mem_affinity_fine: float = 1.00
+
+
+@dataclasses.dataclass
+class Scenario:
+    name: str
+    affinity: bool                        # Kubelet CPU/memory affinity
+    policy: Optional[str]                 # Algorithm 1 policy
+    taskgroup: bool                       # Algorithms 3+4 on/off
+    force_split: bool = False             # Volcano-native: 1 task/container
+    backfill: bool = False                # skip-ahead admission (beyond-paper)
+    ckpt_interval: float = 120.0          # work-seconds between checkpoints
+    perf: PerfParams = PerfParams()
+
+
+@dataclasses.dataclass
+class JobRun:
+    job: Workload
+    gran: Granularity
+    submit_t: float
+    workers: List[WorkerSpec] = dataclasses.field(default_factory=list)
+    start_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    remaining: float = 0.0
+    speed: float = 1.0
+
+    @property
+    def nodes_used(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for w in self.workers:
+            out[w.node] = out.get(w.node, 0) + w.n_tasks
+        return out
+
+    @property
+    def response_time(self) -> float:
+        return self.finish_t - self.submit_t
+
+    @property
+    def running_time(self) -> float:
+        return self.finish_t - self.start_t
+
+
+def _cpu_factor(p: PerfParams, affinity: bool, tasks_per_worker: int) -> float:
+    if not affinity:
+        return p.cpu_no_affinity
+    if tasks_per_worker >= 8:
+        return p.cpu_affinity_coarse
+    if tasks_per_worker >= 2:
+        return p.cpu_affinity_mid
+    return p.cpu_affinity_fine
+
+
+def _mem_gran_factor(p: PerfParams, affinity: bool, tpw: int) -> float:
+    if not affinity:
+        return p.mem_no_affinity
+    if tpw >= 8:
+        return p.mem_affinity_coarse
+    if tpw >= 2:
+        return p.mem_affinity_mid
+    return p.mem_affinity_fine
+
+
+class Simulator:
+    """Gang-scheduled multiprogrammed cluster, progress-based timing."""
+
+    def __init__(self, cluster: Cluster, scenario: Scenario, seed: int = 0):
+        self.cluster = cluster
+        self.sc = scenario
+        self.rng = random.Random(seed)
+        self.queue: List[JobRun] = []
+        self.running: List[JobRun] = []
+        self.done: List[JobRun] = []
+        self.bound: Dict[str, List[WorkerSpec]] = {}
+        self.now = 0.0
+
+    # ---------------- submission -----------------------------------------
+    def submit(self, job: Workload, t: float):
+        gran = select_granularity(job, self.cluster, self.sc.policy,
+                                  default_n_workers=1)
+        if self.sc.force_split:   # Volcano-native: every task its own pod
+            gran = Granularity(job.n_tasks, min(len(self.cluster.nodes),
+                                                job.n_tasks),
+                               job.n_tasks, 1, "volcano")
+        self.queue.append(JobRun(job=job, gran=gran, submit_t=t,
+                                 remaining=job.base_runtime))
+
+    # ---------------- placement ------------------------------------------
+    def _place_default(self, jr: JobRun) -> Optional[List[WorkerSpec]]:
+        """K8s default scheduler: per-pod placement.  The paper observes
+        that "by default the scheduler randomly chooses the nodes to deploy
+        the pods within a same job" — uniform choice among feasible nodes."""
+        workers = make_workers(jr.job, jr.gran)
+        staged: Dict[str, int] = {}
+        for w in workers:
+            feas = [n for n in self.cluster.nodes
+                    if n.free - staged.get(n.name, 0) >= w.n_tasks]
+            if not feas:
+                return None
+            best = self.rng.choice(feas)
+            w.node = best.name
+            staged[best.name] = staged.get(best.name, 0) + w.n_tasks
+        for w in workers:
+            self.cluster.node(w.node).used += w.n_tasks
+            self.bound.setdefault(w.node, []).append(w)
+        return workers
+
+    def _place_taskgroup(self, jr: JobRun) -> Optional[List[WorkerSpec]]:
+        workers = make_workers(jr.job, jr.gran)
+        return TG.schedule_job(self.cluster, workers, jr.gran.n_groups,
+                               bound=self.bound)
+
+    def _try_admit(self):
+        """FIFO gang admission; with ``backfill`` on, jobs behind a blocked
+        head may start if they fit *now* (EASY-style skip-ahead — a
+        beyond-paper extension benchmarked in benchmarks/backfill.py)."""
+        admitted = True
+        while admitted and self.queue:
+            admitted = False
+            candidates = self.queue if self.sc.backfill else self.queue[:1]
+            for jr in list(candidates):
+                placed = (self._place_taskgroup(jr) if self.sc.taskgroup
+                          else self._place_default(jr))
+                if placed is not None:
+                    jr.workers = placed
+                    if jr.start_t is None:
+                        jr.start_t = self.now
+                    self.queue.remove(jr)
+                    self.running.append(jr)
+                    self._pin_domains(jr)
+                    admitted = True
+                    break
+
+    # ---------------- NUMA pinning (Kubelet layer) -------------------------
+    def _pin_domains(self, jr: JobRun):
+        """CPU-manager static policy + best-effort topology manager: pin each
+        worker's tasks to the emptiest socket(s) of its node; without
+        affinity tasks float (recorded as an even spread)."""
+        for w in jr.workers:
+            node = self.cluster.node(w.node)
+            w.domains = {}
+            if not self.sc.affinity:
+                base = w.n_tasks // node.n_domains
+                ext = w.n_tasks % node.n_domains
+                for d in range(node.n_domains):
+                    w.domains[d] = base + (1 if d < ext else 0)
+                continue
+            # static cpu-manager assigns cores in order: best-effort NUMA
+            # tries a single socket, else packs sockets first-fit
+            remaining = w.n_tasks
+            fit = [d for d in range(node.n_domains)
+                   if node.domain_free(d) >= remaining]
+            order = ([min(fit)] if fit else []) +                 list(range(node.n_domains))
+            for d in order:
+                if remaining <= 0:
+                    break
+                take = min(remaining, node.domain_free(d))
+                if take <= 0:
+                    continue
+                node.domain_used[d] += take
+                w.domains[d] = w.domains.get(d, 0) + take
+                remaining -= take
+            if remaining > 0:       # overflow (shouldn't happen): spread
+                w.domains[0] = w.domains.get(0, 0) + remaining
+                node.domain_used[0] += remaining
+
+    def _unpin_domains(self, jr: JobRun):
+        if not self.sc.affinity:
+            return
+        for w in jr.workers:
+            node = self.cluster.node(w.node)
+            for d, t in w.domains.items():
+                node.domain_used[d] -= t
+
+    # ---------------- speed model -----------------------------------------
+    def _mem_load(self) -> Dict[str, float]:
+        """Memory-bandwidth demand per node."""
+        load: Dict[str, float] = {}
+        for jr in self.running:
+            w_mem = {Profile.MEMORY: 1.0, Profile.MIXED: 0.5}.get(
+                jr.job.profile, 0.0)
+            if not w_mem:
+                continue
+            for node, tasks in jr.nodes_used.items():
+                load[node] = load.get(node, 0.0) + w_mem * tasks
+        return load
+
+    def _sharing_jobs(self, jr: JobRun) -> int:
+        """Number of *other* running jobs sharing any of this job's nodes."""
+        mine = set(jr.nodes_used)
+        return sum(1 for o in self.running
+                   if o is not jr and mine & set(o.nodes_used))
+
+    def _speed(self, jr: JobRun, mem_load: Dict[str, float]) -> float:
+        p = self.sc.perf
+        prof = jr.job.profile
+        tpw = jr.gran.tasks_per_worker
+        f = 1.0
+        if not self.sc.affinity:
+            f *= 1.0 + p.share_no_affinity * min(p.share_cap,
+                                                 self._sharing_jobs(jr))
+        if prof in (Profile.CPU, Profile.MIXED):
+            fc = _cpu_factor(p, self.sc.affinity, tpw)
+            f *= fc if prof == Profile.CPU else fc ** 0.5
+        if prof in (Profile.MEMORY, Profile.MIXED):
+            # synchronous job: bandwidth saturation on its hottest node
+            sat = 1.0
+            for node in jr.nodes_used:
+                ld = mem_load.get(node, 0.0)
+                sat = max(sat,
+                          max(1.0, ld / p.mem_bw_tasks) ** p.mem_sat_exp)
+            fm = _mem_gran_factor(p, self.sc.affinity, tpw) * sat
+            f *= fm if prof == Profile.MEMORY else fm ** 0.5
+        if prof == Profile.NETWORK:
+            n_nodes = len(jr.nodes_used)
+            if len(jr.workers) > 1:
+                f *= p.net_multiworker
+            if n_nodes > 1:
+                f *= 1.0 + p.net_internode * (n_nodes - 1)
+        return 1.0 / f
+
+    def _refresh_speeds(self):
+        mem_load = self._mem_load()
+        for jr in self.running:
+            jr.speed = self._speed(jr, mem_load)
+
+    # ---------------- event loop ------------------------------------------
+    def run(self, submissions: List[tuple]) -> List[JobRun]:
+        """submissions: [(Workload, submit_time)] -> completed JobRuns.
+
+        Jobs whose gang can never fit (e.g. a coarse 16-slot worker on
+        4-chip hosts) are reported in ``self.unschedulable`` — the fleet
+        analogue of the paper's usability argument for fine granularity.
+        """
+        self.unschedulable: List[JobRun] = []
+        pending = sorted(submissions, key=lambda s: s[1])
+        failures = sorted(getattr(self, "failures", []))
+        fidx = 0
+        idx = 0
+        while idx < len(pending) or self.queue or self.running:
+            if not self.running and idx >= len(pending) and self.queue \
+                    and fidx >= len(failures):
+                # deadlock: head-of-line gang can never be admitted
+                self.unschedulable.extend(self.queue)
+                self.queue.clear()
+                break
+            next_sub = pending[idx][1] if idx < len(pending) else None
+            next_fail = failures[fidx][0] if fidx < len(failures) else None
+            next_fin = None
+            if self.running:
+                next_fin = min(self.now + jr.remaining / jr.speed
+                               for jr in self.running)
+            t_next = min(x for x in (next_sub, next_fin, next_fail)
+                         if x is not None)
+            # advance progress
+            dt = t_next - self.now
+            for jr in self.running:
+                jr.remaining -= dt * jr.speed
+            self.now = t_next
+            # completions
+            finished = [jr for jr in self.running if jr.remaining <= 1e-9]
+            for jr in finished:
+                jr.finish_t = self.now
+                self.running.remove(jr)
+                self.done.append(jr)
+                self._unpin_domains(jr)
+                for w in jr.workers:
+                    self.cluster.node(w.node).used -= w.n_tasks
+                    self.bound[w.node].remove(w)
+            # node failures / recoveries
+            while fidx < len(failures) and \
+                    failures[fidx][0] <= self.now + 1e-12:
+                _, node_name, down_for = failures[fidx]
+                self._fail_node(node_name, down_for, failures)
+                fidx += 1
+                failures.sort()
+            # submissions
+            while idx < len(pending) and pending[idx][1] <= self.now + 1e-12:
+                self.submit(pending[idx][0], pending[idx][1])
+                idx += 1
+            self._try_admit()
+            self._refresh_speeds()
+        return self.done
+
+    # ---------------- fault handling ---------------------------------------
+    def _fail_node(self, node_name: str, down_for: float, failures):
+        """Host failure: every gang touching the node is killed and
+        re-queued, resuming from its last checkpoint (work quantized to
+        ``ckpt_interval`` — the recomputation shows up in response time).
+        Negative ``down_for`` encodes the recovery event."""
+        node = self.cluster.node(node_name)
+        if down_for < 0:                        # recovery
+            node.n_slots = -int(down_for)
+            return
+        victims = [jr for jr in self.running if node_name in jr.nodes_used]
+        for jr in victims:
+            self.running.remove(jr)
+            self._unpin_domains(jr)
+            for w in jr.workers:
+                self.cluster.node(w.node).used -= w.n_tasks
+                self.bound[w.node].remove(w)
+            done_work = jr.job.base_runtime - jr.remaining
+            ck = self.sc.ckpt_interval
+            saved = (done_work // ck) * ck if ck > 0 else 0.0
+            jr.remaining = jr.job.base_runtime - saved
+            jr.workers = []
+            self.queue.insert(0, jr)            # resumes with priority
+        self.preempted = getattr(self, "preempted", 0) + len(victims)
+        # take the node down; schedule its recovery as a pseudo-failure
+        failures.append((self.now + down_for, node_name,
+                         -float(node.n_slots)))
+        node.n_slots = 0
+
+    # ---------------- metrics ---------------------------------------------
+    @staticmethod
+    def overall_response(done: List[JobRun]) -> float:
+        return sum(j.response_time for j in done)
+
+    @staticmethod
+    def makespan(done: List[JobRun]) -> float:
+        return (max(j.finish_t for j in done)
+                - min(j.submit_t for j in done))

@@ -1,0 +1,132 @@
+"""Algorithms 3 + 4 — Task-Group Scheduling.
+
+Algorithm 3: build N_g groups; repeatedly sort groups by accumulated
+resource request (big->small) and append the next worker to the *smallest*
+group (the paper sorts big->small and picks ``groups[0]`` — its
+'sortGroupByResourceRequests' orders so the selected head is the group that
+should receive the next worker to stay balanced; we implement the intended
+balance semantics: always add to the currently-least-loaded group).  Then
+order workers group-by-group (WorkerOrderFn) and, per worker, filter
+feasible nodes (PredicateFn) and score them (NodeOrderFn, Algorithm 4).
+
+Algorithm 4 scoring for (worker, node):
+    +1 for every already-bound same-group worker on the node   (affinity)
+    +len(group) base score                                     (remaining)
+    -1 for every *other* group present on the node             (anti-affinity)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.cluster import Cluster, Node
+from repro.core.controller import WorkerSpec
+
+
+@dataclasses.dataclass
+class Group:
+    index: int
+    workers: List[WorkerSpec] = dataclasses.field(default_factory=list)
+
+    @property
+    def resource_request(self) -> float:
+        return sum(w.cpu for w in self.workers)
+
+
+def build_groups(n_groups: int, workers: Sequence[WorkerSpec]) -> List[Group]:
+    """Algorithm 3, step 1: balanced group construction."""
+    groups = [Group(i) for i in range(n_groups)]
+    for w in workers:
+        # sortGroupByResourceRequests + take the group needing more work
+        target = min(groups, key=lambda g: (g.resource_request, g.index))
+        w.group = target.index
+        target.workers.append(w)
+    return groups
+
+
+def worker_order(groups: Sequence[Group]) -> List[WorkerSpec]:
+    """WorkerOrderFn: enqueue group-by-group, not by worker id."""
+    out: List[WorkerSpec] = []
+    for g in groups:
+        out.extend(g.workers)
+    return out
+
+
+def default_predicate(worker: WorkerSpec, node: Node) -> bool:
+    """PredicateFn: capacity feasibility (taints/tolerations elided)."""
+    return node.free >= worker.n_tasks
+
+
+def node_score(worker: WorkerSpec, node: Node, groups: Sequence[Group],
+               bound: Dict[str, List[WorkerSpec]]) -> float:
+    """Algorithm 4 — NodeOrderFn."""
+    group = groups[worker.group]
+    on_node = bound.get(node.name, [])
+    score = 0.0
+    # step 1: same-group workers already bound to this node
+    for w in on_node:
+        if w.job == worker.job and w.group == worker.group:
+            score += 1
+    # step 2: remaining tasks in the group (base score)
+    score += len(group.workers)
+    # step 3: avoid other groups on the node
+    others = {(w.job, w.group) for w in on_node
+              if not (w.job == worker.job and w.group == worker.group)}
+    score -= len(others)
+    return score
+
+
+def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
+                 n_groups: int,
+                 predicate: Optional[Callable] = None,
+                 bound: Optional[Dict[str, List[WorkerSpec]]] = None,
+                 commit: bool = True) -> Optional[List[WorkerSpec]]:
+    """Algorithms 3+4 end-to-end for one job (gang semantics).
+
+    Returns the workers with ``node`` assigned, or None if the gang does not
+    fit (nothing is committed in that case).  Scoring uses incremental
+    per-node (job, group) count maps, so a decision is O(workers x nodes)
+    dict lookups — measured at ~ms/job on 4096-host fleets
+    (benchmarks/sched_efficiency.py).
+    """
+    predicate = predicate or default_predicate
+    bound = bound if bound is not None else {}
+    groups = build_groups(n_groups, workers)
+    ordered = worker_order(groups)
+
+    staged: Dict[str, int] = {}
+    # per-node {(job, group): worker count} — the only state Algorithm 4
+    # reads; kept incrementally instead of rescanning bound lists
+    counts: Dict[str, Dict] = {}
+    for node, ws in bound.items():
+        c = counts.setdefault(node, {})
+        for w in ws:
+            c[(w.job, w.group)] = c.get((w.job, w.group), 0) + 1
+    placed: List[WorkerSpec] = []
+    for w in ordered:
+        gsize = len(groups[w.group].workers)
+        key_w = (w.job, w.group)
+        best, best_score = None, None
+        for idx, n in enumerate(cluster.nodes):
+            if not predicate(w, n) or \
+                    n.free - staged.get(n.name, 0) < w.n_tasks:
+                continue
+            c = counts.get(n.name, {})
+            score = c.get(key_w, 0) + gsize \
+                - sum(1 for k in c if k != key_w)
+            rank = (score, -idx)
+            if best is None or rank > best_score:
+                best, best_score = n, rank
+        if best is None:
+            return None                      # gang fails — do not commit
+        w.node = best.name
+        staged[best.name] = staged.get(best.name, 0) + w.n_tasks
+        c = counts.setdefault(best.name, {})
+        c[key_w] = c.get(key_w, 0) + 1
+        placed.append(w)
+
+    if commit:
+        for w in placed:
+            cluster.node(w.node).used += w.n_tasks
+            bound.setdefault(w.node, []).append(w)
+    return placed

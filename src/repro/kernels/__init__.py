@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the workloads' compute hot-spots.
+
+The paper itself is an infrastructure/scheduling contribution (no kernel of
+its own); these kernels are the perf-critical layers of the *workloads* the
+scheduler manages, exercised by the roofline/perf iterations:
+
+  flash_attention   train/prefill attention (causal + sliding-window + GQA)
+  decode_attention  flash-decode against ring-buffered KV caches
+  rglru_scan        RG-LRU linear recurrence (recurrentgemma)
+  wkv6              RWKV6 data-dependent-decay recurrence
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jitted dispatcher in
+``ops.py``; tests sweep shapes/dtypes and assert allclose in interpret mode.
+"""

@@ -1,0 +1,105 @@
+"""Jitted dispatchers for the Pallas kernels.
+
+Each op rearranges model-layout tensors into kernel layout, invokes the
+kernel (``interpret=True`` on CPU — the container target; compiled Mosaic on
+real TPU), and registers its *analytic* FLOP count with the roofline ledger
+(kernels are custom calls, invisible to HLO dot parsing).
+
+``INTERPRET`` is resolved per-call: True unless running on real TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import wkv6 as _wkv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_kv=128):
+    """q: [B, S, H, hd]; k, v: [B, T, K, hd] (GQA) -> [B, S, H, hd]."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qk = q.reshape(B, S, K, G, hd).transpose(0, 2, 3, 1, 4).reshape(
+        B * K, G, S, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * K, T, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * K, T, hd)
+    scale = hd ** -0.5
+    out = _fa.flash_attention_bkgs(
+        (qk.astype(jnp.float32) * scale).astype(qk.dtype), kk, vk,
+        causal=causal, window=window, softcap=softcap, block_q=block_q,
+        block_kv=block_kv, interpret=_interpret())
+    return out.reshape(B, K, G, S, hd).transpose(0, 3, 1, 2, 4).reshape(
+        B, S, H, hd)
+
+
+def decode_attention(q, k, v, cpos, cur, *, window=0, softcap=0.0,
+                     block_kv=512):
+    """q: [B, H, hd]; k, v: [B, C, K, hd]; cpos: [B, C]; cur: [B]."""
+    B, H, hd = q.shape
+    C, K = k.shape[1], k.shape[2]
+    G = H // K
+    qk = q.reshape(B, K, G, hd).reshape(B * K, G, hd)
+    scale = hd ** -0.5
+    qk = (qk.astype(jnp.float32) * scale).astype(qk.dtype)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * K, C, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * K, C, hd)
+    cp = jnp.repeat(cpos, K, axis=0)
+    cu = jnp.repeat(cur[:, None], K, axis=0)
+    out = _dec.decode_attention_bk(qk, kk, vk, cp, cu, window=window,
+                                   softcap=softcap, block_kv=block_kv,
+                                   interpret=_interpret())
+    return out.reshape(B, K, G, hd).reshape(B, H, hd)
+
+
+def rglru_scan(log_a, x, *, block_t=256, block_w=128):
+    """log_a, x: [B, S, W] -> (h [B, S, W] f32, h_last [B, W] f32)."""
+    h, h_last = _rg.rglru_scan_pallas(
+        log_a.astype(jnp.float32), x.astype(jnp.float32), block_t=block_t,
+        block_w=block_w, interpret=_interpret())
+    return h, h_last
+
+
+def wkv6(r, k, v, w, u, s0, *, block_t=128):
+    """Model layout: r,k,v,w [B, S, H, hd]; u [H, hd]; s0 [B, H, hd, hd]."""
+    B, S, H, hd = r.shape
+
+    def to_bh(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, S, hd).astype(
+            jnp.float32)
+
+    u_b = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd).astype(
+        jnp.float32)
+    s0_b = s0.reshape(B * H, hd, hd).astype(jnp.float32)
+    y, s_last = _wkv.wkv6_pallas(to_bh(r), to_bh(k), to_bh(v), to_bh(w),
+                                 u_b, s0_b, block_t=block_t,
+                                 interpret=_interpret())
+    y = y.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return y, s_last.reshape(B, H, hd, hd)
+
+
+# analytic FLOP formulas for the roofline ledger (kernels are custom calls,
+# so HLO dot parsing cannot see them)
+def flash_attention_flops(B, S, T, H, hd, causal):
+    full = 4.0 * B * S * T * H * hd          # qk^T + pv
+    return full / 2 if causal else full
+
+
+def decode_attention_flops(B, C, H, hd):
+    return 4.0 * B * C * H * hd
+
+
+def rglru_flops(B, S, W):
+    return 8.0 * B * S * W                   # elementwise recurrence
+
+
+def wkv6_flops(B, S, H, hd):
+    return 4.0 * B * S * H * hd * hd

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (materializing, no blocking).
+
+These are the ground truth for the per-kernel shape/dtype sweep tests: small
+enough inputs that full materialization is fine, written with the most
+direct formulation possible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: [B, S, H, hd]; k, v: [B, T, K, hd] (GQA) -> [B, S, H, hd]."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, G, hd) * hd ** -0.5
+    s = jnp.einsum("bskgh,btkh->bkgst", qf, k.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pq = jnp.arange(S)[:, None]
+    pk = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= pq >= pk
+    if window:
+        mask &= (pq - pk) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, cpos, cur, *, window=0, softcap=0.0):
+    """q: [B, H, hd]; k, v: [B, C, K, hd]; cpos: [B, C]; cur: [B]."""
+    B, H, hd = q.shape
+    C, K = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, K, G, hd) * hd ** -0.5
+    s = jnp.einsum("bkgh,bckh->bkgc", qf, k.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (cpos >= 0) & (cpos <= cur[:, None])
+    if window:
+        valid &= (cur[:, None] - cpos) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def rglru_scan_ref(log_a, x):
+    """log_a, x: [B, S, W] -> (h [B, S, W], h_last [B, W]).  Sequential."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    mult = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a.astype(jnp.float32)),
+                                1e-6))
+    b = mult * x.astype(jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    h0 = jnp.zeros_like(a[:, 0])
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    hs = hs.swapaxes(0, 1)
+    return hs, hs[:, -1]
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """r,k,v,w: [BH, S, hd]; u: [BH, hd]; s0: [BH, hd, hd].  Sequential."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = (a.astype(jnp.float32) for a in inp)
+        kv = k_t[:, :, None] * v_t[:, None, :]
+        y = jnp.einsum("bi,bij->bj", r_t, s + u[:, :, None] * kv)
+        s = w_t[:, :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), s_last

@@ -1,0 +1,83 @@
+"""Pallas TPU RG-LRU linear-recurrence scan.
+
+Grid: ``(B, num_channel_blocks, num_time_blocks)`` — time is the sequential
+axis; the hidden state (one ``bw``-wide channel block) persists in VMEM
+scratch across time blocks.  Within a block the linear recurrence
+``h_t = a_t h_{t-1} + b_t`` is evaluated with a log-depth associative scan
+over the (bt, bw) tile, so the MXU-free recurrence still vectorizes over the
+128-lane dimension.
+
+Layouts: log_a, x: [B, S, W] f32;  h: [B, S, W];  h_last: [B, W].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_EPS = 1e-6
+
+
+def _kernel(la_ref, x_ref, h_ref, hl_ref, state_sc, *, nt):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        state_sc[...] = jnp.zeros_like(state_sc)
+
+    la = la_ref[0].astype(jnp.float32)                # [bt, bw]
+    x = x_ref[0].astype(jnp.float32)
+    a = jnp.exp(la)
+    mult = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * la), _EPS))
+    b = mult * x
+    # fold the carried state into step 0
+    b = b.at[0].add(a[0] * state_sc[...])
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=0)
+    h_ref[0] = h.astype(h_ref.dtype)
+    state_sc[...] = h[-1]
+
+    @pl.when(t == nt - 1)
+    def _write_last():
+        hl_ref[0] = state_sc[...].astype(hl_ref.dtype)
+
+
+def rglru_scan_pallas(log_a, x, *, block_t=256, block_w=128,
+                      interpret=False):
+    """log_a, x: [B, S, W] -> (h [B, S, W], h_last [B, W])."""
+    B, S, W = x.shape
+    bt, bw = min(block_t, S), min(block_w, W)
+    while S % bt:
+        bt //= 2
+    while W % bw:
+        bw //= 2
+    nt, nw = S // bt, W // bw
+    kernel = functools.partial(_kernel, nt=nt)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nw, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, bw), lambda b, w, t: (b, t, w)),
+            pl.BlockSpec((1, bt, bw), lambda b, w, t: (b, t, w)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bw), lambda b, w, t: (b, t, w)),
+            pl.BlockSpec((1, bw), lambda b, w, t: (b, w)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(log_a, x)

@@ -1,0 +1,93 @@
+"""Pallas TPU WKV6 recurrence (RWKV6 time-mix core).
+
+Grid: ``(B·H, num_time_blocks)`` — time sequential, per-(batch·head) state
+matrix S in VMEM scratch.  The recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+is linear in S, so within a time block it is evaluated with an associative
+scan over (decay-vector, update-matrix) pairs; y needs the *pre-update*
+state, obtained by shifting the scan output by one step and splicing the
+carried state in front.
+
+Layouts: r, k, v, w: [B·H, S, hd] f32 (w = decay in (0,1));
+u: [B·H, hd] (pre-broadcast from [H, hd]); s0: [B·H, hd, hd] f32.
+Outputs: y [B·H, S, hd] f32; s_last [B·H, hd, hd] f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sl_ref,
+            state_sc, *, nt):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        state_sc[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)                  # [bt, hd]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                  # [hd]
+
+    kv = k[:, :, None] * v[:, None, :]                # [bt, hd, hd]
+
+    def combine(lhs, rhs):
+        w1, m1 = lhs
+        w2, m2 = rhs
+        return w1 * w2, m1 * w2[:, :, None] + m2
+
+    w_cum, s_incl = jax.lax.associative_scan(combine, (w, kv), axis=0)
+    s_prev = jnp.concatenate(
+        [state_sc[...][None],
+         state_sc[...][None] * w_cum[:-1, :, None] + s_incl[:-1]], axis=0)
+    y = jnp.einsum("ti,tij->tj", r, s_prev + u[None, :, None] * kv)
+    y_ref[0] = y.astype(y_ref.dtype)
+    state_sc[...] = state_sc[...] * w_cum[-1][:, None] + s_incl[-1]
+
+    @pl.when(t == nt - 1)
+    def _write_last():
+        sl_ref[0] = state_sc[...].astype(sl_ref.dtype)
+
+
+def wkv6_pallas(r, k, v, w, u, s0, *, block_t=128, interpret=False):
+    """r,k,v,w: [BH, S, hd]; u: [BH, hd]; s0: [BH, hd, hd]."""
+    BH, S, hd = r.shape
+    bt = min(block_t, S)
+    while S % bt:
+        bt //= 2
+    nt = S // bt
+    kernel = functools.partial(_kernel, nt=nt)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, bt, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, bt, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, bt, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, hd), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, t: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, t: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u, s0)

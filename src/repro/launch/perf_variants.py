@@ -1,0 +1,56 @@
+"""Named layout variants for the §Perf hillclimbs (EXPERIMENTS.md).
+
+Each entry is a ctx-override dict consumed by ``dryrun.build_cell``.  The
+three hillclimbed cells and their hypothesis chains:
+
+qwen2-0.5b × train_4k (memory-dominant, useful=0.09):
+    the measured profile is *network/memory* — Algorithm 1 says such a job
+    should be COARSE per shard.  ``dp256`` drops tensor parallelism entirely
+    and runs 256-way data parallelism (one sequence per chip): no vocab/head
+    resharding, no replicated-attention waste.  ``dp256_flash`` adds banded
+    flash attention (causal FLOPs halved).
+
+rwkv6-3b × train_4k (collective-dominant: 40 heads don't divide the 16-way
+    model axis, so the baseline replicates the recurrence and all-gathers
+    f32 activations every layer):
+    ``dp256_zero3`` = pure DP over (data×model) + ZeRO-3 params;
+    ``dp256_zero1`` = params replicated, only optimizer state sharded
+    (one param all-gather per *step* instead of per layer).
+
+kimi-k2 × train_4k (collective-dominant: ZeRO-3 weight gathers × remat ×
+    accumulation):
+    ``hier_accum1`` = hierarchical two-hop gathers (ICI before DCN — already
+    default in the MoE path) + accumulation forced to 1 so the per-step
+    gather count halves; ``hier_flash`` adds banded flash attention.
+"""
+from repro.models.sharding import Rules
+
+_DP256 = Rules(batch=("data", "model"), vocab=None, heads=None,
+               kv_heads=None, ffn=None, expert=None, rnn=None)
+
+VARIANTS = {
+    # --- qwen2 train ------------------------------------------------------
+    "dp256": {"rules": _DP256, "accum": 1},
+    "dp256_flash": {"rules": _DP256, "accum": 1, "attn_impl": "xla_flash"},
+    # --- rwkv6 train ------------------------------------------------------
+    "dp256_zero3": {"rules": Rules(batch=("data", "model"), vocab=None,
+                                   heads=None, kv_heads=None, ffn=None,
+                                   expert=None, rnn=None,
+                                   fsdp=("data", "model")),
+                    "accum": 1},
+    "dp256_zero1": {"rules": Rules(batch=("data", "model"), vocab=None,
+                                   heads=None, kv_heads=None, ffn=None,
+                                   expert=None, rnn=None,
+                                   opt_fsdp=("data", "model")),
+                    "accum": 1},
+    # --- kimi train -------------------------------------------------------
+    "hier_accum1": {"accum": 1},
+    "hier_flash": {"accum": 1, "attn_impl": "xla_flash"},
+    # NOTE: xla_flash on the pod-sharded sequence layout is a REFUTED
+    # hypothesis (dynamic q/kv block slices over the sharded seq dim force
+    # per-pair gathers: collectives 61s -> 272s).  q8 composes with the
+    # rect path instead.
+    "hier_q8": {"accum": 1, "moe_gather_quant": True},
+    # --- generic ----------------------------------------------------------
+    "flash": {"attn_impl": "xla_flash"},
+}

@@ -1,0 +1,55 @@
+"""Serving launcher: continuous-batching engine over a (reduced) model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \\
+        --scale 0.05 --requests 8 --slots 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, scaled_down
+from repro.models import model as M
+from repro.serve.engine import Engine, Request
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.scale < 1.0:
+        cfg = scaled_down(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(cfg, key, jnp.float32, max_seq=args.cache_len)
+    eng = Engine(cfg, params, batch_slots=args.slots,
+                 cache_len=args.cache_len)
+    for i in range(args.requests):
+        plen = 4 + (i % 5)
+        prompt = jax.random.randint(jax.random.fold_in(key, i), (plen,),
+                                    0, cfg.vocab).astype(jnp.int32)
+        eng.submit(Request(uid=i, prompt=prompt,
+                           max_new_tokens=args.max_new))
+    t0 = time.time()
+    fins = eng.run_to_completion()
+    dt = time.time() - t0
+    toks = sum(len(f.tokens) for f in fins)
+    print(f"served {len(fins)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s, {args.slots} slots)")
+    for f in sorted(fins, key=lambda f: f.uid)[:4]:
+        print(f"  req {f.uid}: {f.tokens}")
+    return fins
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Training launcher: plan -> mesh -> data -> train loop -> checkpoints.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \\
+        --scale 0.05 --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+
+On the CPU container this drives reduced configs end-to-end (the examples
+use it); on a TPU fleet the same entry point runs the full configs — the
+planner (core.meshplan) supplies layout/optimizer/accumulation and the
+checkpoint layer gives restart/elastic-resume.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ShapeSpec, get_config, scaled_down
+from repro.core.meshplan import plan_job
+from repro.data import DataConfig, SyntheticLM
+from repro.ckpt import checkpoint as CK
+from repro.models import model as M
+from repro.optim import get_optimizer
+from repro.optim.schedule import warmup_cosine
+from repro.train.trainer import init_state, make_train_step, train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="<1: use a reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--compress", default=None, choices=[None, "int8",
+                                                         "topk"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.scale < 1.0:
+        cfg = scaled_down(cfg)
+    shape = ShapeSpec("cli", "train", args.seq, args.batch)
+    plan = plan_job(cfg, shape, n_chips=len(jax.devices()))
+    opt_name = args.optimizer or plan.optimizer
+    opt = get_optimizer(opt_name, warmup_cosine(args.lr, 20, args.steps))
+    ctx = M.Ctx(remat=False, ce_chunk=0)
+
+    state = init_state(cfg, jax.random.PRNGKey(args.seed), opt,
+                       max_seq=args.seq, compress=args.compress)
+    tree = state.tree()
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch, seed=args.seed))
+    start = 0
+    if args.resume and args.ckpt_dir and CK.latest_step(args.ckpt_dir):
+        tree = CK.restore(args.ckpt_dir, tree)
+        start = int(tree["step"])
+        data.state.step = start
+        print(f"resumed from step {start}")
+
+    extras = {}
+    if cfg.n_media_tokens:
+        extras["media"] = jnp.zeros((args.batch, cfg.n_media_tokens,
+                                     cfg.d_model))
+    if cfg.encoder is not None:
+        extras["frames"] = jnp.zeros((args.batch, cfg.encoder.n_ctx,
+                                      cfg.encoder.d_model))
+    step_fn = make_train_step(cfg, ctx, opt, compress=args.compress)
+    state.params = tree["params"]
+    state.opt_state = tree["opt_state"]
+    state.step = tree["step"]
+    if args.compress:
+        state.err_state = tree.get("err_state", state.err_state)
+    tree, metrics = train_loop(
+        cfg, state, step_fn, iter(data), args.steps - start,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, extras=extras)
+    print(f"done: step={int(tree['step'])} "
+          f"loss={float(metrics['loss']):.4f} (plan: {plan.notes or 'tp'})")
+    return tree
+
+
+if __name__ == "__main__":
+    main()

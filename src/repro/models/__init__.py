@@ -1,0 +1,1 @@
+"""Pure-JAX model zoo (dense / MoE / SSM / hybrid / VLM / enc-dec)."""

@@ -1,0 +1,136 @@
+"""Logical-axis sharding rules.
+
+Params and activations are annotated with *logical* axis names; a
+:class:`Rules` table maps logical names to physical mesh axes.  The
+application-layer planner (``repro.core.meshplan``) emits a ``Rules`` object
+per job — this is the TPU embodiment of the paper's granularity decision
+(which dimensions of the job are partitioned, and how finely).
+
+``Rules`` values may be: ``None`` (replicate), a mesh-axis name, or a tuple of
+mesh-axis names.  ``spec(rules, names)`` builds a ``PartitionSpec``;
+``constrain(x, rules, names)`` applies ``with_sharding_constraint`` when a
+mesh is active (no-op on a bare single device so smoke tests run unchanged).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    batch: Axis = ("pod", "data")
+    seq: Axis = None               # activation sequence dim
+    embed: Axis = None             # d_model dim of activations & params
+    vocab: Axis = "model"
+    heads: Axis = "model"
+    kv_heads: Axis = "model"
+    head_dim: Axis = None
+    ffn: Axis = "model"
+    expert: Axis = "model"
+    expert_ffn: Axis = None        # F dim of expert weights (TP inside expert)
+    rnn: Axis = "model"
+    cache_seq: Axis = None         # KV-cache length dim (SP for long decode)
+    layers: Axis = None            # stacked-unit leading dim
+    fsdp: Axis = None              # extra param shard axis (ZeRO-3 style)
+    opt_fsdp: Axis = None          # optimizer-state-only sharding (ZeRO-1)
+
+    def axis_size(self, mesh: Optional[jax.sharding.Mesh], name: str) -> int:
+        ax = getattr(self, name)
+        if ax is None or mesh is None:
+            return 1
+        axes = (ax,) if isinstance(ax, str) else ax
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+
+# Paper-faithful default ("fine-grained" operating point): TP over model,
+# DP over (pod, data).
+TP_RULES = Rules()
+
+# Coarse-grained ("network-intensive → single worker" analogue): no tensor
+# parallelism, params replicated, pure DP.
+DP_RULES = Rules(vocab=None, heads=None, kv_heads=None, ffn=None,
+                 expert=None, rnn=None)
+
+# FSDP flavour for models whose params exceed per-chip HBM under pure TP
+# (kimi-k2 1T): params additionally sharded over the data axes.
+FSDP_RULES = Rules(fsdp=("pod", "data"))
+
+
+def _dedup(axes_seq: Sequence[Axis]) -> Tuple[Axis, ...]:
+    """PartitionSpec forbids reusing a mesh axis; later uses are dropped."""
+    used: set = set()
+    out = []
+    for ax in axes_seq:
+        if ax is None:
+            out.append(None)
+            continue
+        tup = (ax,) if isinstance(ax, str) else tuple(ax)
+        keep = tuple(a for a in tup if a not in used)
+        used.update(keep)
+        out.append(keep if len(keep) > 1 else (keep[0] if keep else None))
+    return tuple(out)
+
+
+def spec(rules: Rules, names: Sequence[Optional[str]]) -> P:
+    """PartitionSpec for a value whose dims have the given logical names."""
+    axes = [getattr(rules, n) if n is not None else None for n in names]
+    return P(*_dedup(axes))
+
+
+def divisible(mesh: Optional[jax.sharding.Mesh], rules: Rules,
+              name: str, dim: int) -> bool:
+    return mesh is None or dim % rules.axis_size(mesh, name) == 0
+
+
+def logical_sharding(mesh, rules: Rules, names: Sequence[Optional[str]],
+                     shape: Sequence[int]):
+    """NamedSharding, demoting any logical axis that does not divide evenly
+    (e.g. 10 heads over 16-way model axis -> replicate that dim)."""
+    names = [n if (n is not None and divisible(mesh, rules, n, d)) else None
+             for n, d in zip(names, shape)]
+    return jax.sharding.NamedSharding(mesh, spec(rules, names))
+
+
+def constrain(x, rules: Optional[Rules], names: Sequence[Optional[str]]):
+    """with_sharding_constraint under an ambient mesh; identity otherwise.
+
+    Logical axes that do not divide the corresponding dim evenly are demoted
+    to replicated (e.g. 10 heads over a 16-way model axis).
+    """
+    if rules is None:
+        return x
+    mesh = get_abstract_mesh_or_none()
+    if mesh is None:
+        return x
+    mesh_shape = dict(mesh.shape)
+    fixed = []
+    for i, n in enumerate(names):
+        if n is None:
+            fixed.append(None)
+            continue
+        ax = getattr(rules, n)
+        axes = () if ax is None else ((ax,) if isinstance(ax, str) else ax)
+        size = 1
+        for a in axes:
+            size *= mesh_shape.get(a, 1)
+        fixed.append(n if (size > 0 and x.shape[i] % size == 0) else None)
+    return jax.lax.with_sharding_constraint(x, spec(rules, fixed))
+
+
+def get_abstract_mesh_or_none():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or m.empty:
+            return None
+        return m
+    except Exception:
+        return None

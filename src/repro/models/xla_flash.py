@@ -1,0 +1,121 @@
+"""Banded pair-list flash attention in pure JAX.
+
+The (q-block, kv-block) pairs that intersect the attention band (causal
+and/or sliding-window) are enumerated *statically*; one ``lax.scan`` walks
+the pair list carrying online-softmax state (m, l, acc).  Because the pair
+list excludes dead blocks, the compiled FLOPs are the true banded FLOPs —
+unlike the rectangular baseline which masks but still computes everything.
+This is the XLA twin of the Pallas kernel in ``repro.kernels.flash_attention``
+(same block structure, same accounting), and serves as its oracle at scale.
+
+Output buffer trick: pairs for a q-block are consecutive, so the body simply
+writes the *current* normalized accumulator into the output slab every
+iteration — the final write per q-block wins, no flush flags needed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def band_pairs(nq, nkv, bq, bkv, *, causal, window, q_offset=0):
+    """Static (i, j, is_first) pair list for the attention band.
+
+    Block i covers q positions [q_offset + i*bq, q_offset + (i+1)*bq);
+    block j covers kv positions [j*bkv, (j+1)*bkv).
+    """
+    pairs = []
+    for i in range(nq):
+        q_lo = q_offset + i * bq
+        q_hi = q_lo + bq - 1
+        first = True
+        for j in range(nkv):
+            k_lo = j * bkv
+            k_hi = k_lo + bkv - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window and k_hi < q_lo - window + 1:
+                continue
+            pairs.append((i, j, first))
+            first = False
+    assert pairs, "empty attention band"
+    i_idx = np.array([p[0] for p in pairs], np.int32)
+    j_idx = np.array([p[1] for p in pairs], np.int32)
+    is_first = np.array([p[2] for p in pairs], np.bool_)
+    return i_idx, j_idx, is_first
+
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=0,
+                    softcap=0.0, block_q=256, block_kv=256, q_offset=0):
+    """q: [B,S,H,hd]; k,v: [B,T,K,hd]; q_pos: [S]; kv_pos: [T] -> [B,S,H,hd].
+
+    ``q_offset`` is the *static* position of q block 0, used only for band
+    construction; masking below uses the actual position arrays, so
+    correctness never depends on it (a loose offset only costs dead blocks).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq, bkv = min(block_q, S), min(block_kv, T)
+    while S % bq:
+        bq //= 2
+    while T % bkv:
+        bkv //= 2
+    nq, nkv = S // bq, T // bkv
+    i_idx, j_idx, is_first = band_pairs(nq, nkv, bq, bkv, causal=causal,
+                                        window=window, q_offset=q_offset)
+    scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, S, K, G, hd)
+
+    out0 = jnp.zeros((B, S, K, G, hd), jnp.float32)
+    m0 = jnp.full((B, K, G, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, bq), jnp.float32)
+    acc0 = jnp.zeros((B, bq, K, G, hd), jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        out, m, l, acc = carry
+        i, j, first = inp
+        m = jnp.where(first, NEG_INF, m)
+        l = jnp.where(first, 0.0, l)
+        acc = jnp.where(first, 0.0, acc)
+
+        qi = jax.lax.dynamic_slice(qf, (0, i * bq, 0, 0, 0),
+                                   (B, bq, K, G, hd))
+        kj = jax.lax.dynamic_slice(k, (0, j * bkv, 0, 0),
+                                   (B, bkv, K, hd)).astype(jnp.float32)
+        vj = jax.lax.dynamic_slice(v, (0, j * bkv, 0, 0),
+                                   (B, bkv, K, hd)).astype(jnp.float32)
+        pq = jax.lax.dynamic_slice(q_pos, (i * bq,), (bq,))
+        pk = jax.lax.dynamic_slice(kv_pos, (j * bkv,), (bkv,))
+
+        s = jnp.einsum("bqkgh,btkh->bkgqt", qi, kj)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((bq, bkv), bool)
+        if causal:
+            mask &= pq[:, None] >= pk[None, :]
+        if window:
+            mask &= (pq[:, None] - pk[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqt,btkh->bqkgh", p, vj)
+        acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+
+        blk = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        out = jax.lax.dynamic_update_slice(out, blk, (0, i * bq, 0, 0, 0))
+        m = m_new
+        return (out, m, l, acc), None
+
+    (out, _, _, _), _ = jax.lax.scan(
+        body, (out0, m0, l0, acc0),
+        (jnp.asarray(i_idx), jnp.asarray(j_idx), jnp.asarray(is_first)))
+    return out.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,3 @@
+"""Optimizers, schedules, gradient compression."""
+from repro.optim.optimizers import Optimizer, adafactor, adamw, get_optimizer
+from repro.optim.schedule import constant, warmup_cosine

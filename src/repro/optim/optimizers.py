@@ -1,0 +1,144 @@
+"""Optimizers as (init, update) pairs over parameter pytrees (pure JAX).
+
+* AdamW — fp32 moments + decoupled weight decay.
+* Adafactor — factored second moment (row/col statistics for matrices),
+  update clipping; required for 1T-param configs where AdamW fp32 state
+  exceeds fleet HBM (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple]
+    name: str = ""
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), grads), g
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          max_grad_norm: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+        }
+
+    def update(grads, state, params, step):
+        if max_grad_norm:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            step_ = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p - lr * step_.astype(jnp.float32)).astype(p.dtype), \
+                m2, v2
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_state = {"m": treedef.unflatten([o[1] for o in out]),
+                     "v": treedef.unflatten([o[2] for o in out])}
+        return new_p, new_state, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update, "adamw")
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment)
+# --------------------------------------------------------------------------
+def adafactor(lr_fn, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0) -> Optimizer:
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"row": row, "col": col}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(st, params,
+                            is_leaf=lambda x: isinstance(x, jnp.ndarray))
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** -decay
+        gnorm = global_norm(grads)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p.shape):
+                row = beta * s["row"] + (1 - beta) * g2.mean(axis=-1)
+                col = beta * s["col"] + (1 - beta) * g2.mean(axis=-2)
+                rfac = row / jnp.maximum(
+                    row.mean(axis=-1, keepdims=True), eps)
+                u = gf / (jnp.sqrt(rfac)[..., None] *
+                          jnp.sqrt(col)[..., None, :] + eps)
+                ns = {"row": row, "col": col}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf / (jnp.sqrt(v) + eps)
+                ns = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p - lr * u.astype(jnp.float32)).astype(p.dtype), ns
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_s = treedef.unflatten([o[1] for o in out])
+        return new_p, new_s, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def get_optimizer(name: str, lr_fn) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn)
+    if name == "adafactor":
+        return adafactor(lr_fn)
+    raise ValueError(name)

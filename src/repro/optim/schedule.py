@@ -1,0 +1,23 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  end_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = peak_lr * jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+        prog = jnp.clip((s - warmup_steps)
+                        / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (end_frac + (1 - end_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return fn
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)

@@ -1,0 +1,109 @@
+"""Roofline assembly: compiled artifact -> three terms + verdict.
+
+    compute term    = per-device dot FLOPs            / 197 TFLOP/s
+    memory term     = per-device HBM-traffic proxy    / 819 GB/s
+    collective term = per-device ICI bytes / 50 GB/s + DCN bytes / 12.5 GB/s
+
+FLOPs/collectives come from the HLO parser (``hlo_cost``, loop-trip exact);
+the HBM proxy is max(dot operand/output traffic, resident argument bytes) —
+exact for weight-streaming decode, a documented upper-ish bound for fused
+training activations.  Elementwise-only recurrences (RG-LRU associative
+scan) add an analytic correction term since they emit no dots.
+
+MODEL_FLOPS uses 6·N_active·tokens (train) / 2·N_active·tokens (fwd-only);
+the MODEL/HLO ratio surfaces remat recompute and masked-attention waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.roofline import hw
+from repro.roofline.hlo_cost import Costs
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_chip: float
+    hlo_flops_per_chip: float
+    useful_ratio: float
+    coll_ici_bytes: float
+    coll_dcn_bytes: float
+    hbm_bytes: float
+    arg_bytes: float
+    notes: str = ""
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time (no-overlap upper bound of the three terms —
+        max() would assume perfect overlap; report both)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the useful model FLOPs come to the chip's peak if the
+        step ran at the roofline step time (MFU at the bound)."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops_per_chip / t / hw.PEAK_FLOPS_BF16
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["step_time_s"] = self.step_time_s
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def _elementwise_extras(cfg: ArchConfig, shape: ShapeSpec,
+                        n_chips: int) -> float:
+    """HBM bytes for scan recurrences that emit no dot ops (RG-LRU)."""
+    extra = 0.0
+    if shape.kind == "decode":
+        return 0.0
+    kinds = cfg.block_kinds()
+    n_rglru = sum(1 for k in kinds if k == "rglru")
+    if n_rglru:
+        toks = shape.global_batch * shape.seq_len / n_chips
+        # a, b, h arrays in f32, ~log2(S)-pass associative scan lowered to
+        # ~3 sweeps in practice
+        extra += n_rglru * toks * cfg.rnn_width * 4 * 3 * 3
+    return extra
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one token per sequence
+
+
+def build(cfg: ArchConfig, shape: ShapeSpec, mesh_name: str, n_chips: int,
+          costs: Costs, arg_bytes: int, notes: str = "") -> Roofline:
+    hbm = max(costs.dot_bytes, float(arg_bytes)) \
+        + _elementwise_extras(cfg, shape, n_chips)
+    compute_s = costs.flops / hw.PEAK_FLOPS_BF16
+    memory_s = hbm / hw.HBM_BW
+    coll_s = costs.coll_ici / hw.ICI_BW + costs.coll_dcn / hw.DCN_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / n_chips
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, n_chips=n_chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, model_flops_per_chip=mf,
+        hlo_flops_per_chip=costs.flops,
+        useful_ratio=mf / costs.flops if costs.flops else 0.0,
+        coll_ici_bytes=costs.coll_ici, coll_dcn_bytes=costs.coll_dcn,
+        hbm_bytes=hbm, arg_bytes=float(arg_bytes), notes=notes)

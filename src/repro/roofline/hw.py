@@ -1,0 +1,11 @@
+"""TPU v5e hardware constants (the dry-run TARGET; container runs on CPU)."""
+
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (intra-pod)
+DCN_BW = 12.5e9                # bytes/s per chip (cross-pod, 25GB/s/host / 2)
+HBM_BYTES = 16 * 2 ** 30       # per chip
+VMEM_BYTES = 128 * 2 ** 20
+
+CHIPS_PER_POD = 256
+CHIPS_PER_HOST = 4

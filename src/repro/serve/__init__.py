@@ -1,0 +1,2 @@
+"""Continuous-batching serving engine."""
+from repro.serve.engine import Engine, Finished, Request

@@ -1,0 +1,2 @@
+"""Training loop substrate."""
+from repro.train.trainer import TrainState, init_state, make_train_step, train_loop

@@ -1,0 +1,96 @@
+"""HLO cost parser: loop-trip-exact FLOPs + collective attribution."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.hlo_cost import HloModule, analyze
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_multiply_trip_count():
+    D, L, B = 256, 8, 32
+    w = jnp.ones((D, D), jnp.bfloat16)
+    x = jnp.ones((B, D), jnp.bfloat16)
+
+    def scanned(x, w):
+        def body(h, _):
+            return h @ w, None
+        return jax.lax.scan(body, x, None, length=L)[0]
+
+    costs = analyze(_compile(scanned, x, w), {})
+    assert costs.flops == pytest.approx(L * 2 * B * D * D, rel=0.01)
+
+
+def test_unrolled_equals_scanned():
+    D, B = 128, 16
+    w = jnp.ones((D, D), jnp.float32)
+    x = jnp.ones((B, D), jnp.float32)
+
+    def unrolled(x, w):
+        for _ in range(4):
+            x = x @ w
+        return x
+
+    def scanned(x, w):
+        return jax.lax.scan(lambda h, _: (h @ w, None), x, None,
+                            length=4)[0]
+
+    cu = analyze(_compile(unrolled, x, w), {})
+    cs = analyze(_compile(scanned, x, w), {})
+    assert cu.flops == pytest.approx(cs.flops, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    D = 64
+    x = jnp.ones((8, D), jnp.float32)
+    w = jnp.ones((D, D), jnp.float32)
+
+    def inner(h):
+        return jax.lax.scan(lambda c, _: (c @ w, None), h, None,
+                            length=3)[0]
+
+    def outer(x, w):
+        return jax.lax.scan(lambda h, _: (inner(h), None), x, None,
+                            length=5)[0]
+
+    costs = analyze(_compile(outer, x, w), {})
+    assert costs.flops == pytest.approx(15 * 2 * 8 * D * D, rel=0.01)
+
+
+def test_dot_bytes_counted():
+    a = jnp.ones((64, 128), jnp.bfloat16)
+    b = jnp.ones((128, 32), jnp.bfloat16)
+    costs = analyze(_compile(lambda a, b: a @ b, a, b), {})
+    want = (64 * 128 + 128 * 32 + 64 * 32) * 2
+    assert costs.dot_bytes >= want * 0.9
+
+
+def test_entry_detection_and_no_collectives_single_device():
+    x = jnp.ones((16, 16), jnp.float32)
+    costs = analyze(_compile(lambda x: x @ x, x), {})
+    assert costs.coll_ici == 0 and costs.coll_dcn == 0
+    assert costs.flops == pytest.approx(2 * 16 ** 3, rel=0.01)
+
+
+def test_trip_count_parsing_from_backend_config():
+    txt = """HloModule m
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  ROOT %t = (s32[], f32[4]) tuple(%p)
+}
+%cond (p2: (s32[], f32[4])) -> pred[] {
+  %p2 = (s32[], f32[4]) parameter(0)
+  ROOT %lt = pred[] compare(%p2, %p2), direction=LT
+}
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4] parameter(0)
+  %w = (s32[], f32[4]) while(%a), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %r = f32[4] get-tuple-element(%w), index=1
+}
+"""
+    mod = HloModule(txt, {})
+    line = [ln for ln in mod.computations["main"] if "while(" in ln][0]
+    assert mod._trip_count(line, "cond") == 7

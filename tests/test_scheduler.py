@@ -1,0 +1,165 @@
+"""Unit + property tests for the paper's scheduling algorithms."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import Cluster, Node, paper_cluster
+from repro.core.controller import (WorkerSpec, allocate_tasks, hostfile,
+                                   make_workers)
+from repro.core.planner import select_granularity
+from repro.core.profiles import PAPER_BENCHMARKS, Profile, Workload
+from repro.core import taskgroup as TG
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 — granularity selection
+# --------------------------------------------------------------------------
+def test_scale_policy_network_job_single_worker():
+    g = select_granularity(PAPER_BENCHMARKS["G-FFT"], paper_cluster(),
+                           "scale")
+    assert (g.n_nodes, g.n_workers, g.n_groups) == (1, 1, 1)
+
+
+def test_scale_policy_cpu_job_one_worker_per_node():
+    g = select_granularity(PAPER_BENCHMARKS["EP-DGEMM"], paper_cluster(),
+                           "scale")
+    assert g.n_workers == g.n_nodes == g.n_groups == 4
+
+
+def test_granularity_policy_cpu_job_one_worker_per_task():
+    g = select_granularity(PAPER_BENCHMARKS["EP-DGEMM"], paper_cluster(),
+                           "granularity")
+    assert g.n_workers == 16 and g.n_groups == 4
+
+
+def test_default_policy_keeps_user_workers():
+    g = select_granularity(PAPER_BENCHMARKS["EP-DGEMM"], paper_cluster(),
+                           None, default_n_workers=2)
+    assert g.n_workers == 2 and g.n_nodes == 1
+
+
+@given(n_tasks=st.integers(1, 64), n_nodes=st.integers(1, 16),
+       policy=st.sampled_from(["scale", "granularity", None]),
+       profile=st.sampled_from(list(Profile)))
+@settings(max_examples=200, deadline=None)
+def test_granularity_invariants(n_tasks, n_nodes, policy, profile):
+    cluster = Cluster([Node(f"n{i}", 32) for i in range(n_nodes)])
+    job = Workload("j", profile, n_tasks, 100.0)
+    g = select_granularity(job, cluster, policy)
+    assert 1 <= g.n_groups <= max(g.n_workers, 1)
+    assert g.n_nodes <= max(n_nodes, 1)
+    assert g.n_workers >= 1
+    if policy in ("scale", "granularity") and profile == Profile.NETWORK:
+        assert g.n_workers == 1
+    if policy == "granularity" and profile != Profile.NETWORK:
+        assert g.n_workers == n_tasks
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 — MPI-aware controller
+# --------------------------------------------------------------------------
+@given(n_tasks=st.integers(1, 128), n_workers=st.integers(1, 64))
+@settings(max_examples=200, deadline=None)
+def test_roundrobin_allocation_conserves_tasks(n_tasks, n_workers):
+    counts = allocate_tasks(n_tasks, n_workers)
+    assert sum(counts) == n_tasks
+    assert max(counts) - min(counts) <= 1          # RoundRobin balance
+    assert len(counts) == n_workers
+
+
+@given(n_tasks=st.integers(1, 64), n_workers=st.integers(1, 32))
+@settings(max_examples=100, deadline=None)
+def test_worker_resources_proportional(n_tasks, n_workers):
+    job = Workload("j", Profile.CPU, n_tasks, 1.0)
+    g = select_granularity(job, Cluster([Node("n", 64)]), None,
+                           default_n_workers=n_workers)
+    workers = make_workers(job, g, cpu_per_task=2.0, mem_per_task=3.0)
+    assert sum(w.n_tasks for w in workers) == n_tasks
+    for w in workers:
+        assert w.cpu == 2.0 * w.n_tasks          # R/N_t * nTasks
+        assert w.memory == 3.0 * w.n_tasks
+    hf = hostfile(workers)
+    assert sum(hf.values()) == n_tasks
+
+
+# --------------------------------------------------------------------------
+# Algorithms 3+4 — task-group scheduling
+# --------------------------------------------------------------------------
+def _mk_workers(n, tasks_each=1):
+    return [WorkerSpec(job="j", index=i, n_tasks=tasks_each,
+                       cpu=float(tasks_each), memory=1.0) for i in range(n)]
+
+
+@given(n_workers=st.integers(1, 64), n_groups=st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_groups_balanced(n_workers, n_groups):
+    groups = TG.build_groups(n_groups, _mk_workers(n_workers))
+    sizes = [len(g.workers) for g in groups]
+    assert sum(sizes) == n_workers
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_worker_order_is_group_major():
+    workers = _mk_workers(8)
+    groups = TG.build_groups(2, workers)
+    ordered = TG.worker_order(groups)
+    seen = [w.group for w in ordered]
+    # group-major: all of group g before group g+1
+    assert seen == sorted(seen)
+
+
+def test_node_score_affinity_and_antiaffinity():
+    cluster = paper_cluster()
+    workers = _mk_workers(4, tasks_each=4)
+    groups = TG.build_groups(2, workers)
+    w = groups[0].workers[0]
+    other = WorkerSpec(job="other", index=0, n_tasks=4, cpu=4.0, memory=1.0,
+                       group=0)
+    mine = WorkerSpec(job="j", index=9, n_tasks=4, cpu=4.0, memory=1.0,
+                      group=w.group)
+    base = TG.node_score(w, cluster.nodes[0], groups, {})
+    with_mine = TG.node_score(w, cluster.nodes[0], groups,
+                              {"node0": [mine]})
+    with_other = TG.node_score(w, cluster.nodes[0], groups,
+                               {"node0": [other]})
+    assert with_mine == base + 1                 # same-group affinity
+    assert with_other == base - 1                # anti-affinity
+
+
+def test_gang_atomicity_no_partial_commit():
+    cluster = Cluster([Node("n0", 8), Node("n1", 8)])
+    cluster.nodes[0].used = 4
+    cluster.nodes[1].used = 4
+    # 3 workers x 4 tasks need 12 free; only 8 available -> must not commit
+    workers = _mk_workers(3, tasks_each=4)
+    placed = TG.schedule_job(cluster, workers, 2)
+    assert placed is None
+    assert cluster.nodes[0].used == 4 and cluster.nodes[1].used == 4
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_taskgroup_even_spread(seed):
+    """TG's whole point: a 16-task job splits evenly over the 4 nodes."""
+    rng = random.Random(seed)
+    cluster = paper_cluster()
+    # random background load, small enough that a spread remains possible
+    for n in cluster.nodes:
+        n.used = rng.choice([0, 4, 8])
+    workers = _mk_workers(16, tasks_each=1)
+    placed = TG.schedule_job(cluster, workers, 4)
+    assert placed is not None
+    per_node = {}
+    for w in placed:
+        per_node[w.node] = per_node.get(w.node, 0) + 1
+    assert max(per_node.values()) - min(per_node.values()) <= 1 \
+        or len(per_node) == 4
+
+
+def test_capacity_never_exceeded():
+    cluster = Cluster([Node("n0", 8), Node("n1", 8)])
+    for _ in range(4):
+        TG.schedule_job(cluster, _mk_workers(4, tasks_each=1), 2)
+    for n in cluster.nodes:
+        assert n.used <= n.n_slots

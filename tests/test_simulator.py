@@ -1,0 +1,198 @@
+"""Simulator behaviour + reproduction of the paper's headline claims."""
+import random
+
+import pytest
+
+from repro.core.cluster import paper_cluster
+from repro.core.profiles import PAPER_BENCHMARKS, Profile, Workload
+from repro.core.scenarios import SCENARIOS
+from repro.core.simulator import Simulator
+
+
+def run_scn(name, subs, seed=0):
+    sim = Simulator(paper_cluster(), SCENARIOS[name], seed=seed)
+    return sim.run(list(subs))
+
+
+def exp2_subs(seed=7):
+    rng = random.Random(seed)
+    jobs = [w for w in PAPER_BENCHMARKS.values() for _ in range(4)]
+    rng.shuffle(jobs)
+    times = sorted(rng.uniform(0, 1200) for _ in jobs)
+    return list(zip(jobs, times))
+
+
+def test_all_jobs_complete_and_metrics_sane():
+    done = run_scn("CM_G_TG", exp2_subs())
+    assert len(done) == 20
+    for j in done:
+        assert j.finish_t >= j.start_t >= j.submit_t
+        assert j.running_time > 0
+    assert Simulator.makespan(done) > 0
+
+
+def test_gang_fifo_no_overcommit():
+    done = run_scn("NONE", exp2_subs())
+    # replay events and check concurrent slot usage never exceeds capacity
+    events = []
+    for j in done:
+        events.append((j.start_t, +j.gran.n_tasks))
+        events.append((j.finish_t, -j.gran.n_tasks))
+    cap = paper_cluster().total_slots
+    used = 0
+    # at equal timestamps, releases (negative) precede admissions
+    for _, d in sorted(events, key=lambda e: (e[0], e[1])):
+        used += d
+        assert used <= cap + 1e-9
+
+
+def test_network_jobs_stay_single_node_under_policies():
+    for scn in ("CM_S", "CM_G", "CM_S_TG", "CM_G_TG"):
+        done = run_scn(scn, exp2_subs())
+        for j in done:
+            if j.job.profile == Profile.NETWORK:
+                assert len(j.nodes_used) == 1
+                assert len(j.workers) == 1
+
+
+def test_volcano_splits_everything():
+    done = run_scn("Volcano", exp2_subs())
+    for j in done:
+        assert len(j.workers) == j.job.n_tasks
+
+
+def test_contention_is_time_varying():
+    """A lone STREAM runs at full speed; with a co-located STREAM it slows."""
+    w = PAPER_BENCHMARKS["EP-STREAM"]
+    solo = run_scn("CM", [(w, 0.0)])
+    pair = run_scn("CM", [(w, 0.0), (w, 0.0)], seed=3)
+    solo_rt = solo[0].running_time
+    pair_rt = max(j.running_time for j in pair)
+    assert pair_rt >= solo_rt
+
+
+# ----------------------------------------------------------------------
+# paper-claim reproduction (tolerances: simulator is calibrated to the
+# paper's aggregate anchors; see EXPERIMENTS.md §Repro for full table)
+# ----------------------------------------------------------------------
+def _improvement(a, b):
+    return 1.0 - a / b
+
+
+def test_exp1_dgemm_claims():
+    subs = [(PAPER_BENCHMARKS["EP-DGEMM"], 60.0 * i) for i in range(10)]
+    resp = {}
+    for scn in ("NONE", "CM", "CM_S", "CM_G"):
+        done = run_scn(scn, subs)
+        resp[scn] = Simulator.overall_response(done)
+    # paper: CM_S* -5%/-26%, CM_G* -15%/-34% vs CM/NONE (+-6pp tolerance)
+    assert abs(_improvement(resp["CM_S"], resp["CM"]) - 0.05) < 0.06
+    assert abs(_improvement(resp["CM_G"], resp["CM"]) - 0.15) < 0.06
+    assert abs(_improvement(resp["CM_S"], resp["NONE"]) - 0.26) < 0.08
+    assert abs(_improvement(resp["CM_G"], resp["NONE"]) - 0.34) < 0.08
+
+
+@pytest.mark.parametrize("metric", ["response", "makespan"])
+def test_exp2_ordering_claims(metric):
+    """The paper's qualitative ordering must hold on seed averages:
+    fine-grained+TG beats CM beats NONE; G_TG is the best overall."""
+    agg = {}
+    for scn in ("NONE", "CM", "CM_S_TG", "CM_G_TG"):
+        vals = []
+        for seed in range(4):
+            done = run_scn(scn, exp2_subs(), seed=seed)
+            vals.append(Simulator.overall_response(done) if
+                        metric == "response" else Simulator.makespan(done))
+        agg[scn] = sum(vals) / len(vals)
+    assert agg["CM_G_TG"] < agg["CM"] < agg["NONE"]
+    assert agg["CM_G_TG"] <= agg["CM_S_TG"] * 1.02
+
+
+def test_exp2_response_magnitudes():
+    resp = {}
+    for scn in ("NONE", "CM", "CM_G_TG"):
+        vals = []
+        for seed in range(4):
+            done = run_scn(scn, exp2_subs(), seed=seed)
+            vals.append(Simulator.overall_response(done))
+        resp[scn] = sum(vals) / len(vals)
+    # paper: CM_G_TG -19% vs CM, -35% vs NONE (+-8pp)
+    assert abs(_improvement(resp["CM_G_TG"], resp["CM"]) - 0.19) < 0.08
+    assert abs(_improvement(resp["CM_G_TG"], resp["NONE"]) - 0.35) < 0.08
+
+
+def test_table3_framework_comparison():
+    mks = {}
+    for scn in ("Kubeflow", "Volcano", "CM", "CM_S_TG", "CM_G_TG"):
+        done = run_scn(scn, exp2_subs())
+        mks[scn] = Simulator.makespan(done)
+    # Volcano's network-splitting catastrophe: order of magnitude worse
+    assert mks["Volcano"] > 20 * mks["CM"]
+    # Kubeflow ~= CM (both coarse, default-ish scheduling)
+    assert abs(mks["Kubeflow"] / mks["CM"] - 1.0) < 0.15
+    # paper Table III anchors (seconds), generous +-20% on absolutes
+    assert abs(mks["CM"] - 2529) / 2529 < 0.2
+    assert abs(mks["Volcano"] - 123055) / 123055 < 0.2
+    assert mks["CM_G_TG"] < mks["CM_S_TG"] * 1.02
+
+
+def test_stream_tg_claim():
+    rts = {}
+    for scn in ("CM_S", "CM_S_TG"):
+        vals = []
+        for seed in range(4):
+            done = run_scn(scn, exp2_subs(), seed=seed)
+            st = [j.running_time for j in done
+                  if j.job.name == "EP-STREAM"]
+            vals.append(sum(st) / len(st))
+        rts[scn] = sum(vals) / len(vals)
+    # paper: TG cuts STREAM runtime by 33% vs CM_S (+-10pp)
+    assert abs(_improvement(rts["CM_S_TG"], rts["CM_S"]) - 0.33) < 0.10
+
+
+# ----------------------------------------------------------------------
+# fault tolerance + backfill (beyond-paper scheduler features)
+# ----------------------------------------------------------------------
+def test_node_failure_requeues_and_completes():
+    w = PAPER_BENCHMARKS["EP-DGEMM"]
+    sim = Simulator(paper_cluster(), SCENARIOS["CM_G_TG"], seed=0)
+    sim.failures = [(200.0, "node0", 300.0)]     # node0 dies at t=200 for 300s
+    done = sim.run([(w, 0.0), (w, 0.0)])
+    assert len(done) == 2                        # everything still completes
+    assert sim.preempted >= 1                    # at least one gang was killed
+    # the victim recomputed work since its last checkpoint: response time
+    # exceeds the undisturbed run
+    undisturbed = Simulator(paper_cluster(), SCENARIOS["CM_G_TG"], seed=0)
+    base = undisturbed.run([(w, 0.0), (w, 0.0)])
+    assert max(j.response_time for j in done) > \
+        max(j.response_time for j in base)
+
+
+def test_checkpoint_interval_bounds_lost_work():
+    w = PAPER_BENCHMARKS["EP-DGEMM"]
+    import dataclasses as dc
+    scn = dc.replace(SCENARIOS["CM_G_TG"], ckpt_interval=60.0)
+    sim = Simulator(paper_cluster(), scn, seed=0)
+    sim.failures = [(650.0, "node0", 100.0)]
+    done = sim.run([(w, 0.0)])
+    # progress at failure ~650s of 700s work; checkpointed at 600 -> total
+    # work <= 700 + 60 + eps (lost work bounded by the interval)
+    assert done[0].finish_t <= 650 + 100 + (700 - 600) + 120
+
+
+def test_backfill_beats_fifo_head_of_line():
+    """A huge job blocks FIFO; with backfill, small jobs slip through."""
+    import dataclasses as dc
+    from repro.core.profiles import Profile, Workload
+    big = Workload("big", Profile.CPU, 112, 400.0)    # leaves 16 slots free
+    small = Workload("small", Profile.CPU, 16, 100.0)
+    subs = [(big, 0.0), (big, 1.0), (small, 2.0), (small, 3.0)]
+    fifo = Simulator(paper_cluster(), SCENARIOS["CM_G"], seed=0)
+    r_fifo = fifo.run(list(subs))
+    scn_bf = dc.replace(SCENARIOS["CM_G"], backfill=True)
+    bf = Simulator(paper_cluster(), scn_bf, seed=0)
+    r_bf = bf.run(list(subs))
+    resp_f = sum(j.response_time for j in r_fifo if j.job.name == "small")
+    resp_b = sum(j.response_time for j in r_bf if j.job.name == "small")
+    assert resp_b < resp_f * 0.6                 # small jobs much faster
+    assert len(r_bf) == 4                        # nothing starved
