@@ -1,0 +1,125 @@
+"""Fleet-scale simulator benchmark: heap event loop vs the seed loop.
+
+Drives the discrete-event simulator under Poisson heavy-traffic arrivals
+(``repro.core.scenarios.poisson_heavy_traffic``) across 256/1024/4096-host
+fleets and emits ``BENCH_sim_scale.json`` with per-size wall time, µs/event
+and jobs/sec, plus the speedup of the default (heap + dirty-set + indexed
+cluster) loop over the ``--legacy`` seed loop (full min-scan, full speed
+refresh, O(N) feasibility scans per worker).
+
+  python -m benchmarks.sim_scale [--smoke] [--no-legacy] [--scenario CM_G_TG]
+
+The legacy comparison runs at the sizes in ``LEGACY_SIZES`` (the seed loop
+is quadratic — running it at 4096 hosts would dominate the benchmark's
+runtime without adding information).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core.cluster import Cluster, Node
+from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
+from repro.core.simulator import Simulator
+
+# (hosts, jobs): job counts scale sublinearly so the full sweep stays
+# minutes, with the acceptance point (4096 hosts / 10k jobs) at the top
+SIZES = ((256, 2000), (1024, 3000), (4096, 10000))
+LEGACY_SIZES = (256, 1024)
+SMOKE_SIZES = ((64, 300),)
+
+
+def fleet(n_hosts: int, slots: int = 4) -> Cluster:
+    return Cluster([Node(f"h{i}", n_slots=slots, n_domains=1)
+                    for i in range(n_hosts)])
+
+
+def run_once(n_hosts: int, n_jobs: int, seed: int = 0, legacy: bool = False,
+             scenario: str = "CM_G_TG") -> dict:
+    cluster = fleet(n_hosts)
+    subs = poisson_heavy_traffic(n_jobs, cluster.total_slots, seed=seed)
+    sim = Simulator(cluster, SCENARIOS[scenario], seed=seed)
+    t0 = time.perf_counter()
+    done = sim.run(subs, legacy=legacy)
+    wall = time.perf_counter() - t0
+    return {
+        "hosts": n_hosts,
+        "jobs": n_jobs,
+        "mode": "legacy" if legacy else "heap",
+        "scenario": scenario,
+        "completed": len(done),
+        "unschedulable": len(sim.unschedulable),
+        "events": sim.n_events,
+        "wall_s": round(wall, 3),
+        "us_per_event": round(wall / max(sim.n_events, 1) * 1e6, 2),
+        "jobs_per_s": round(len(done) / wall, 1) if wall > 0 else None,
+        "sim_makespan_s": round(Simulator.makespan(done), 1) if done else 0.0,
+    }
+
+
+def run(csv_rows=None, smoke: bool = False, legacy: bool = True,
+        scenario: str = "CM_G_TG", out_path: str = None):
+    if out_path is None:   # smoke sweeps must not clobber the full record
+        out_path = ("BENCH_sim_scale_smoke.json" if smoke
+                    else "BENCH_sim_scale.json")
+    sizes = SMOKE_SIZES if smoke else SIZES
+    legacy_sizes = ({s for s, _ in SMOKE_SIZES} if smoke
+                    else set(LEGACY_SIZES)) if legacy else set()
+    print("\n== Simulator scale: heap event loop vs seed loop ==")
+    print(f"{'hosts':>6s} {'jobs':>6s} {'mode':>7s} {'wall_s':>9s} "
+          f"{'us/event':>9s} {'jobs/s':>8s}")
+    results = []
+    by_size = {}
+    for hosts, jobs in sizes:
+        for mode_legacy in ([False, True] if hosts in legacy_sizes
+                            else [False]):
+            r = run_once(hosts, jobs, legacy=mode_legacy, scenario=scenario)
+            results.append(r)
+            by_size.setdefault(hosts, {})[r["mode"]] = r
+            print(f"{hosts:6d} {jobs:6d} {r['mode']:>7s} {r['wall_s']:9.2f} "
+                  f"{r['us_per_event']:9.1f} {r['jobs_per_s']:8.1f}")
+            if csv_rows is not None:
+                csv_rows.append((f"sim_{hosts}hosts_{r['mode']}",
+                                 r["us_per_event"],
+                                 f"jobs_per_s={r['jobs_per_s']}"))
+    speedups = {}
+    for hosts, modes in by_size.items():
+        if "legacy" in modes and "heap" in modes:
+            speedups[str(hosts)] = round(
+                modes["legacy"]["wall_s"] / modes["heap"]["wall_s"], 2)
+            print(f"  speedup @{hosts} hosts: {speedups[str(hosts)]}x")
+    payload = {"results": results, "speedup_vs_legacy": speedups,
+               "smoke": smoke}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI smoke")
+    ap.add_argument("--no-legacy", action="store_true",
+                    help="skip the seed-loop baseline runs")
+    ap.add_argument("--legacy", action="store_true",
+                    help="legacy baseline only (seed event loop) at all "
+                         "sizes — slow; for manual A/B runs")
+    ap.add_argument("--scenario", default="CM_G_TG",
+                    choices=sorted(SCENARIOS))
+    ap.add_argument("--out", default=None,
+                    help="output path (default BENCH_sim_scale.json, or "
+                         "BENCH_sim_scale_smoke.json under --smoke)")
+    args = ap.parse_args()
+    if args.legacy:
+        for hosts, jobs in (SMOKE_SIZES if args.smoke else SIZES):
+            r = run_once(hosts, jobs, legacy=True, scenario=args.scenario)
+            print(r)
+        return
+    run(smoke=args.smoke, legacy=not args.no_legacy,
+        scenario=args.scenario, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,11 +10,20 @@ One model serves two instantiations:
 
 The scheduler algorithms (planner / controller / task-group) are agnostic to
 which instantiation they run on — exactly the paper's layering claim.
+
+The cluster is *indexed* for fleet scale: ``node(name)`` is an O(1) dict
+lookup, ``free_slots`` is a maintained counter, and a free-capacity bucket
+index answers "which nodes have >= k free slots" without scanning all N
+nodes.  The index is kept consistent through a ``Node.__setattr__`` hook on
+``used``/``n_slots``, so existing call sites (and tests) that mutate nodes
+directly stay correct.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
+
+_INDEXED_FIELDS = ("used", "n_slots")
 
 
 @dataclasses.dataclass
@@ -29,6 +38,13 @@ class Node:
     def __post_init__(self):
         if self.domain_used is None:
             self.domain_used = [0] * self.n_domains
+
+    def __setattr__(self, name, value):
+        object.__setattr__(self, name, value)
+        if name in _INDEXED_FIELDS:
+            cluster = self.__dict__.get("_cluster")
+            if cluster is not None:
+                cluster._reindex(self)
 
     @property
     def free(self) -> int:
@@ -49,8 +65,85 @@ class Cluster:
     inter_bw: float = 0.02       # relative cross-node bandwidth (1GbE/ICI)
     cross_pod_bw: float = 0.004  # relative DCN bandwidth (fleet)
 
+    def __post_init__(self):
+        self.rebuild_index()
+
+    # ---------------- capacity index --------------------------------------
+    def rebuild_index(self):
+        """(Re)build the name->node map and free-capacity buckets.  Call
+        after structural changes to ``nodes`` (never needed for plain
+        ``used``/``n_slots`` mutations — those reindex automatically)."""
+        self._by_name: Dict[str, Node] = {}
+        self._node_idx: Dict[str, int] = {}
+        self._free_of: Dict[str, int] = {}
+        self._buckets: Dict[int, set] = {}   # free count -> {node name}
+        self._free_total = 0
+        for i, n in enumerate(self.nodes):
+            object.__setattr__(n, "_cluster", self)
+            self._by_name[n.name] = n
+            self._node_idx[n.name] = i
+            f = n.n_slots - n.used
+            self._free_of[n.name] = f
+            self._buckets.setdefault(f, set()).add(n.name)
+            self._free_total += f
+
+    def _reindex(self, node: Node):
+        old = self._free_of.get(node.name)
+        if old is None:                       # not (yet) a member
+            return
+        new = node.n_slots - node.used
+        if new == old:
+            return
+        bucket = self._buckets.get(old)
+        if bucket is not None:
+            bucket.discard(node.name)
+            if not bucket:
+                del self._buckets[old]
+        self._buckets.setdefault(new, set()).add(node.name)
+        self._free_of[node.name] = new
+        self._free_total += new - old
+
+    def iter_free_ge(self, k: int) -> Iterator[Tuple[int, Node]]:
+        """Yield ``(index, node)`` for every node with ``free >= k``, in
+        arbitrary order.  O(matching nodes + distinct free values)."""
+        by_name, idx = self._by_name, self._node_idx
+        for f in list(self._buckets):
+            if f >= k:
+                for name in self._buckets.get(f, ()):
+                    yield idx[name], by_name[name]
+
+    def free_ge_items(self, k: int) -> List[Tuple[int, Node]]:
+        """``(index, node)`` list for nodes with ``free >= k`` (arbitrary
+        order) — the materialized form of :meth:`iter_free_ge` for hot
+        loops."""
+        nidx, by_name = self._node_idx, self._by_name
+        return [(nidx[nm], by_name[nm])
+                for f, names in self._buckets.items() if f >= k
+                for nm in names]
+
+    def max_free(self) -> int:
+        """Largest per-node free capacity — O(distinct free values)."""
+        return max(self._buckets, default=0)
+
+    def feasible_nodes(self, k: int,
+                       staged: Optional[Dict[str, int]] = None) -> List[Node]:
+        """Nodes with ``free - staged >= k`` in cluster order — the exact
+        candidate list a full scan of ``self.nodes`` would produce, without
+        visiting infeasible nodes."""
+        if staged:
+            out = [(i, n) for i, n in self.iter_free_ge(k)
+                   if n.n_slots - n.used - staged.get(n.name, 0) >= k]
+        else:
+            out = list(self.iter_free_ge(k))
+        out.sort(key=lambda t: t[0])
+        return [n for _, n in out]
+
+    # ---------------- queries ---------------------------------------------
     def node(self, name: str) -> Node:
-        return next(n for n in self.nodes if n.name == name)
+        return self._by_name[name]
+
+    def node_index(self, name: str) -> int:
+        return self._node_idx[name]
 
     @property
     def total_slots(self) -> int:
@@ -58,7 +151,7 @@ class Cluster:
 
     @property
     def free_slots(self) -> int:
-        return sum(n.free for n in self.nodes)
+        return self._free_total
 
     def fits(self, demand_per_node: Dict[str, int]) -> bool:
         return all(self.node(n).free >= d

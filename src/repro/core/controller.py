@@ -15,8 +15,8 @@ from repro.core.planner import Granularity
 from repro.core.profiles import Workload
 
 
-@dataclasses.dataclass
-class WorkerSpec:
+@dataclasses.dataclass(eq=False)     # identity hash: workers live in the
+class WorkerSpec:                    # scheduler's per-node bound sets
     job: str
     index: int
     n_tasks: int                  # slots in the hostfile entry

@@ -15,8 +15,10 @@ container, spread, no granularity awareness).
 """
 from __future__ import annotations
 
-from typing import Dict
+import random
+from typing import Dict, List, Sequence, Tuple
 
+from repro.core.profiles import Profile, Workload
 from repro.core.simulator import Scenario
 
 SCENARIOS: Dict[str, Scenario] = {
@@ -39,3 +41,48 @@ SCENARIOS: Dict[str, Scenario] = {
 
 def get_scenario(name: str) -> Scenario:
     return SCENARIOS[name]
+
+
+# --------------------------------------------------------------------------
+# fleet-scale heavy-traffic arrivals (benchmarks/sim_scale.py + perf tests)
+# --------------------------------------------------------------------------
+# Job mix for 4-chip fleet hosts: granularity policies split CPU/memory jobs
+# into 1-task workers (any free chip fits), network jobs stay coarse and
+# must fit a single host.
+FLEET_WORKLOADS: Tuple[Workload, ...] = (
+    Workload("fleet-cpu-16", Profile.CPU, 16, 150.0),
+    Workload("fleet-cpu-32", Profile.CPU, 32, 240.0),
+    Workload("fleet-mem-8", Profile.MEMORY, 8, 90.0),
+    Workload("fleet-mem-16", Profile.MEMORY, 16, 120.0),
+    Workload("fleet-mix-16", Profile.MIXED, 16, 180.0),
+    Workload("fleet-net-4", Profile.NETWORK, 4, 60.0),
+)
+
+
+def poisson_heavy_traffic(n_jobs: int, cluster_slots: int, seed: int = 0,
+                          utilization: float = 1.25,
+                          workloads: Sequence[Workload] = FLEET_WORKLOADS,
+                          ) -> List[Tuple[Workload, float]]:
+    """Poisson arrival process sized to keep the cluster saturated.
+
+    The arrival rate is chosen so offered load (mean slot-seconds demanded
+    per second) is ``utilization`` x cluster capacity — above 1.0 the queue
+    grows during the arrival window and drains afterwards, the
+    heavy-traffic regime where per-event scheduler cost dominates.
+    Returns ``[(Workload, submit_time)]`` ready for ``Simulator.run``.
+    """
+    import dataclasses
+
+    rng = random.Random(seed)
+    mean_demand = sum(w.n_tasks * w.base_runtime
+                      for w in workloads) / len(workloads)
+    rate = utilization * cluster_slots / mean_demand   # jobs per second
+    t = 0.0
+    subs: List[Tuple[Workload, float]] = []
+    for i in range(n_jobs):
+        t += rng.expovariate(rate)
+        w = workloads[rng.randrange(len(workloads))]
+        # unique name per arrival: each submission is its own K8s job (own
+        # UID), so Algorithm 4 never aliases concurrent jobs of one type
+        subs.append((dataclasses.replace(w, name=f"{w.name}.{i}"), t))
+    return subs

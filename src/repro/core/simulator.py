@@ -16,10 +16,34 @@ CPU-bound: migration/affinity penalties shrinking with finer granularity
 balance-sensitive effect task-grouping fixes); network-bound: inter-node and
 multi-container communication penalties (the effect granularity policies
 avoid by keeping such jobs coarse).
+
+Event-loop complexity (fleet scale)
+-----------------------------------
+The default loop is built for 4096-host / 10k-job fleets:
+
+* **finish-time event heap** — the next completion is a heap peek, not an
+  O(R) min-scan over running jobs; stale entries are invalidated lazily via
+  per-job version counters.
+* **dirty-set speed refresh** — a start/finish/failure on node n only
+  recomputes the speed (and heap entry) of jobs that share a node with the
+  jobs whose placement changed, via a node -> running-jobs index; jobs on
+  untouched nodes keep their heap entries. Remaining work is synced lazily
+  (piecewise-linear progress is integrated only when a job's speed changes).
+* **incremental state** — per-node memory-bandwidth load and the per-node
+  bound-worker sets/count maps (shared with ``taskgroup``) are maintained
+  on admit/finish/fail instead of rebuilt per event, and the cluster's
+  free-capacity bucket index makes feasibility filtering O(feasible) rather
+  than O(N) per worker.
+
+Per event the cost is O(|dirty jobs| + log R) instead of the seed's
+O(R · W + N); ``run(..., legacy=True)`` keeps the seed's full-rescan loop
+(identical semantics, measured by ``benchmarks/sim_scale.py`` as the
+pre-optimization baseline).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import random
 from typing import Dict, List, Optional
 
@@ -28,6 +52,8 @@ from repro.core.controller import WorkerSpec, make_workers
 from repro.core.planner import Granularity, select_granularity
 from repro.core.profiles import Profile, Workload
 from repro.core import taskgroup as TG
+
+_MEM_WEIGHT = {Profile.MEMORY: 1.0, Profile.MIXED: 0.5}
 
 
 # --------------------------------------------------------------------------
@@ -70,8 +96,8 @@ class Scenario:
     perf: PerfParams = PerfParams()
 
 
-@dataclasses.dataclass
-class JobRun:
+@dataclasses.dataclass(eq=False)         # identity hash: JobRuns live in the
+class JobRun:                            # per-node running-jobs index
     job: Workload
     gran: Granularity
     submit_t: float
@@ -80,9 +106,19 @@ class JobRun:
     finish_t: Optional[float] = None
     remaining: float = 0.0
     speed: float = 1.0
+    # engine-internal state (lazy progress sync + heap-entry invalidation)
+    _synced_t: float = dataclasses.field(default=0.0, repr=False)
+    _ver: int = dataclasses.field(default=0, repr=False)
+    _seq: int = dataclasses.field(default=0, repr=False)
+    _pushed: bool = dataclasses.field(default=False, repr=False)
+    _nodes: Optional[Dict[str, int]] = dataclasses.field(default=None,
+                                                         repr=False)
+    _plan: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
     @property
     def nodes_used(self) -> Dict[str, int]:
+        if self._nodes is not None:
+            return self._nodes
         out: Dict[str, int] = {}
         for w in self.workers:
             out[w.node] = out.get(w.node, 0) + w.n_tasks
@@ -125,10 +161,20 @@ class Simulator:
         self.sc = scenario
         self.rng = random.Random(seed)
         self.queue: List[JobRun] = []
-        self.running: List[JobRun] = []
+        # insertion-ordered set of running jobs (dict keys): O(1)
+        # add/remove, stable iteration order for trace-identical requeues
+        self.running: Dict[JobRun, None] = {}
         self.done: List[JobRun] = []
-        self.bound: Dict[str, List[WorkerSpec]] = {}
+        self.bound = TG.BoundIndex()
         self.now = 0.0
+        self.n_events = 0
+        self._seq = 0
+        self._node_jobs: Dict[str, set] = {}   # node -> running JobRuns
+        self._mem_load_live: Dict[str, float] = {}
+        self._finish_heap: List[tuple] = []
+        # monotone floor over every speed ever assigned (speeds are <= 1);
+        # bounds the completion-scan window in the event loop
+        self._speed_floor = 1.0
 
     # ---------------- submission -----------------------------------------
     def submit(self, job: Workload, t: float):
@@ -138,19 +184,29 @@ class Simulator:
             gran = Granularity(job.n_tasks, min(len(self.cluster.nodes),
                                                 job.n_tasks),
                                job.n_tasks, 1, "volcano")
-        self.queue.append(JobRun(job=job, gran=gran, submit_t=t,
-                                 remaining=job.base_runtime))
+        jr = JobRun(job=job, gran=gran, submit_t=t,
+                    remaining=job.base_runtime)
+        jr._seq = self._seq
+        self._seq += 1
+        self.queue.append(jr)
 
     # ---------------- placement ------------------------------------------
-    def _place_default(self, jr: JobRun) -> Optional[List[WorkerSpec]]:
+    def _place_default(self, jr: JobRun,
+                       use_index: bool = True) -> Optional[List[WorkerSpec]]:
         """K8s default scheduler: per-pod placement.  The paper observes
         that "by default the scheduler randomly chooses the nodes to deploy
-        the pods within a same job" — uniform choice among feasible nodes."""
+        the pods within a same job" — uniform choice among feasible nodes.
+        The indexed path builds the identical candidate list (same nodes,
+        same cluster order — so the same RNG stream) from the free-capacity
+        buckets instead of scanning every node."""
         workers = make_workers(jr.job, jr.gran)
         staged: Dict[str, int] = {}
         for w in workers:
-            feas = [n for n in self.cluster.nodes
-                    if n.free - staged.get(n.name, 0) >= w.n_tasks]
+            if use_index:
+                feas = self.cluster.feasible_nodes(w.n_tasks, staged)
+            else:
+                feas = [n for n in self.cluster.nodes
+                        if n.free - staged.get(n.name, 0) >= w.n_tasks]
             if not feas:
                 return None
             best = self.rng.choice(feas)
@@ -158,34 +214,103 @@ class Simulator:
             staged[best.name] = staged.get(best.name, 0) + w.n_tasks
         for w in workers:
             self.cluster.node(w.node).used += w.n_tasks
-            self.bound.setdefault(w.node, []).append(w)
+            self.bound.add(w)
         return workers
 
-    def _place_taskgroup(self, jr: JobRun) -> Optional[List[WorkerSpec]]:
-        workers = make_workers(jr.job, jr.gran)
+    def _place_taskgroup(self, jr: JobRun,
+                         use_index: bool = True) -> Optional[List[WorkerSpec]]:
+        if not use_index:            # legacy: rebuild the gang every attempt
+            workers = make_workers(jr.job, jr.gran)
+            return TG.schedule_job(self.cluster, workers, jr.gran.n_groups,
+                                   bound=self.bound, use_index=False)
+        if jr._plan is None:         # plan is deterministic — cache it
+            workers = make_workers(jr.job, jr.gran)
+            jr._plan = (workers, TG.make_plan(workers, jr.gran.n_groups))
+        workers, plan = jr._plan
         return TG.schedule_job(self.cluster, workers, jr.gran.n_groups,
-                               bound=self.bound)
+                               bound=self.bound, use_index=True, plan=plan)
 
-    def _try_admit(self):
+    def _try_admit(self, dirty_nodes: Optional[set] = None,
+                   use_index: bool = True):
         """FIFO gang admission; with ``backfill`` on, jobs behind a blocked
         head may start if they fit *now* (EASY-style skip-ahead — a
         beyond-paper extension benchmarked in benchmarks/backfill.py)."""
         admitted = True
         while admitted and self.queue:
             admitted = False
-            candidates = self.queue if self.sc.backfill else self.queue[:1]
-            for jr in list(candidates):
-                placed = (self._place_taskgroup(jr) if self.sc.taskgroup
-                          else self._place_default(jr))
+            limit = len(self.queue) if self.sc.backfill else 1
+            for i in range(limit):
+                jr = self.queue[i]
+                if use_index and self.sc.taskgroup and \
+                        (jr.gran.n_tasks > self.cluster.free_slots or
+                         jr.gran.tasks_per_worker > self.cluster.max_free()):
+                    continue             # gang cannot fit: O(1) reject
+                placed = (self._place_taskgroup(jr, use_index)
+                          if self.sc.taskgroup
+                          else self._place_default(jr, use_index))
                 if placed is not None:
                     jr.workers = placed
                     if jr.start_t is None:
                         jr.start_t = self.now
-                    self.queue.remove(jr)
-                    self.running.append(jr)
-                    self._pin_domains(jr)
+                    del self.queue[i]
+                    self._on_start(jr, dirty_nodes)
                     admitted = True
                     break
+
+    # ---------------- incremental cluster-state bookkeeping ----------------
+    def _on_start(self, jr: JobRun, dirty_nodes: Optional[set]):
+        self.running[jr] = None
+        self._pin_domains(jr)
+        jr._nodes = None
+        nodes = {}
+        for w in jr.workers:
+            nodes[w.node] = nodes.get(w.node, 0) + w.n_tasks
+        jr._nodes = nodes
+        w_mem = _MEM_WEIGHT.get(jr.job.profile, 0.0)
+        for node, tasks in nodes.items():
+            self._node_jobs.setdefault(node, set()).add(jr)
+            if w_mem:
+                self._mem_load_live[node] = \
+                    self._mem_load_live.get(node, 0.0) + w_mem * tasks
+        jr._synced_t = self.now
+        jr._ver += 1              # any old heap entry is stale
+        jr._pushed = False
+        if dirty_nodes is not None:
+            dirty_nodes.update(nodes)
+
+    def _on_stop(self, jr: JobRun, dirty_nodes: Optional[set]):
+        """Release a finishing/killed job's placement (slots, bound workers,
+        node->jobs index, memory load) — the inverse of ``_on_start``."""
+        del self.running[jr]
+        self._unpin_domains(jr)
+        nodes = jr.nodes_used
+        for w in jr.workers:
+            self.cluster.node(w.node).used -= w.n_tasks
+            self.bound.remove(w)
+        w_mem = _MEM_WEIGHT.get(jr.job.profile, 0.0)
+        for node, tasks in nodes.items():
+            jobs = self._node_jobs.get(node)
+            if jobs is not None:
+                jobs.discard(jr)
+                if not jobs:
+                    del self._node_jobs[node]
+            if w_mem:
+                left = self._mem_load_live.get(node, 0.0) - w_mem * tasks
+                if left:
+                    self._mem_load_live[node] = left
+                else:
+                    self._mem_load_live.pop(node, None)
+        jr._ver += 1              # invalidate this job's heap entry
+        jr._pushed = False
+        jr._nodes = None
+        if dirty_nodes is not None:
+            dirty_nodes.update(nodes)
+
+    def _sync(self, jr: JobRun):
+        """Integrate piecewise-linear progress up to ``now``."""
+        if jr._synced_t < self.now:
+            jr.remaining -= (self.now - jr._synced_t) * jr.speed
+        jr._synced_t = self.now
 
     # ---------------- NUMA pinning (Kubelet layer) -------------------------
     def _pin_domains(self, jr: JobRun):
@@ -206,7 +331,7 @@ class Simulator:
             remaining = w.n_tasks
             fit = [d for d in range(node.n_domains)
                    if node.domain_free(d) >= remaining]
-            order = ([min(fit)] if fit else []) +                 list(range(node.n_domains))
+            order = ([min(fit)] if fit else []) + list(range(node.n_domains))
             for d in order:
                 if remaining <= 0:
                     break
@@ -230,11 +355,12 @@ class Simulator:
 
     # ---------------- speed model -----------------------------------------
     def _mem_load(self) -> Dict[str, float]:
-        """Memory-bandwidth demand per node."""
+        """Memory-bandwidth demand per node, rebuilt from scratch (legacy
+        loop; the default loop maintains ``_mem_load_live`` incrementally —
+        the two are exactly equal, all weights being dyadic rationals)."""
         load: Dict[str, float] = {}
         for jr in self.running:
-            w_mem = {Profile.MEMORY: 1.0, Profile.MIXED: 0.5}.get(
-                jr.job.profile, 0.0)
+            w_mem = _MEM_WEIGHT.get(jr.job.profile, 0.0)
             if not w_mem:
                 continue
             for node, tasks in jr.nodes_used.items():
@@ -243,9 +369,13 @@ class Simulator:
 
     def _sharing_jobs(self, jr: JobRun) -> int:
         """Number of *other* running jobs sharing any of this job's nodes."""
-        mine = set(jr.nodes_used)
-        return sum(1 for o in self.running
-                   if o is not jr and mine & set(o.nodes_used))
+        seen = set()
+        for node in jr.nodes_used:
+            jobs = self._node_jobs.get(node)
+            if jobs:
+                seen |= jobs
+        seen.discard(jr)
+        return len(seen)
 
     def _speed(self, jr: JobRun, mem_load: Dict[str, float]) -> float:
         p = self.sc.perf
@@ -276,32 +406,133 @@ class Simulator:
         return 1.0 / f
 
     def _refresh_speeds(self):
+        """Legacy full refresh: every running job, mem load rebuilt."""
         mem_load = self._mem_load()
         for jr in self.running:
             jr.speed = self._speed(jr, mem_load)
 
+    def _refresh_dirty(self, dirty_nodes: set):
+        """Recompute speed + heap entry only for jobs co-located with a
+        placement change; everyone else's heap entry stays valid."""
+        if not dirty_nodes:
+            return
+        dirty = set()
+        for node in dirty_nodes:
+            jobs = self._node_jobs.get(node)
+            if jobs:
+                dirty |= jobs
+        heap = self._finish_heap
+        for jr in dirty:
+            if jr not in self.running:
+                continue
+            self._sync(jr)
+            new_speed = self._speed(jr, self._mem_load_live)
+            if jr._pushed and new_speed == jr.speed:
+                continue          # finish prediction unchanged
+            jr.speed = new_speed
+            if new_speed < self._speed_floor:
+                self._speed_floor = new_speed
+            jr._ver += 1
+            heapq.heappush(heap,
+                           (self.now + jr.remaining / jr.speed,
+                            jr._seq, jr._ver, jr))
+            jr._pushed = True
+
     # ---------------- event loop ------------------------------------------
-    def run(self, submissions: List[tuple]) -> List[JobRun]:
+    def run(self, submissions: List[tuple],
+            legacy: bool = False) -> List[JobRun]:
         """submissions: [(Workload, submit_time)] -> completed JobRuns.
 
         Jobs whose gang can never fit (e.g. a coarse 16-slot worker on
         4-chip hosts) are reported in ``self.unschedulable`` — the fleet
         analogue of the paper's usability argument for fine granularity.
+
+        ``legacy=True`` runs the seed's full-rescan event loop (O(R·W+N)
+        per event) with identical semantics — the baseline for
+        ``benchmarks/sim_scale.py`` and the equivalence oracle for
+        ``tests/test_sim_scale.py``.
         """
+        if legacy:
+            return self._run_legacy(submissions)
         self.unschedulable: List[JobRun] = []
         pending = sorted(submissions, key=lambda s: s[1])
-        failures = sorted(getattr(self, "failures", []))
-        fidx = 0
+        fails = list(getattr(self, "failures", []))
+        heapq.heapify(fails)
+        heap = self._finish_heap
         idx = 0
         while idx < len(pending) or self.queue or self.running:
+            self.n_events += 1
             if not self.running and idx >= len(pending) and self.queue \
-                    and fidx >= len(failures):
+                    and not fails:
                 # deadlock: head-of-line gang can never be admitted
                 self.unschedulable.extend(self.queue)
                 self.queue.clear()
                 break
             next_sub = pending[idx][1] if idx < len(pending) else None
-            next_fail = failures[fidx][0] if fidx < len(failures) else None
+            next_fail = fails[0][0] if fails else None
+            while heap and heap[0][3]._ver != heap[0][2]:
+                heapq.heappop(heap)           # drop stale entries
+            next_fin = heap[0][0] if heap else None
+            t_next = min(x for x in (next_sub, next_fin, next_fail)
+                         if x is not None)
+            self.now = t_next
+            dirty: set = set()
+            # completions: exactly the seed's criterion — every running job
+            # with <= 1e-9 work units left at ``now``.  A job's time window
+            # is 1e-9 / speed, so entries must be scanned (not cut at the
+            # first miss: a slower job further down the heap can still
+            # qualify) out to 1e-9 / (smallest speed ever assigned), a
+            # monotone floor that only ever over-scans; non-qualifying
+            # entries in that window are pushed back untouched.
+            horizon = self.now + 1e-9 / self._speed_floor
+            requeue = []
+            while heap:
+                t_fin, seq, ver, jr = heap[0]
+                if ver != jr._ver:
+                    heapq.heappop(heap)
+                    continue
+                if t_fin > horizon:
+                    break
+                heapq.heappop(heap)
+                if (t_fin - self.now) * jr.speed > 1e-9:
+                    requeue.append((t_fin, seq, ver, jr))
+                    continue
+                jr.finish_t = self.now
+                jr.remaining = 0.0
+                self.done.append(jr)
+                self._on_stop(jr, dirty)
+            for entry in requeue:
+                heapq.heappush(heap, entry)
+            # node failures / recoveries (time-ordered heap: a recovery
+            # pushed mid-processing can never reorder consumed entries)
+            while fails and fails[0][0] <= self.now + 1e-12:
+                _, node_name, down_for = heapq.heappop(fails)
+                self._fail_node(node_name, down_for, fails, dirty)
+            # submissions
+            while idx < len(pending) and pending[idx][1] <= self.now + 1e-12:
+                self.submit(pending[idx][0], pending[idx][1])
+                idx += 1
+            self._try_admit(dirty, use_index=True)
+            self._refresh_dirty(dirty)
+        return self.done
+
+    def _run_legacy(self, submissions: List[tuple]) -> List[JobRun]:
+        """The seed event loop: full min-scan, full speed refresh, full
+        mem-load rebuild and O(N) feasibility scans at every event."""
+        self.unschedulable = []
+        pending = sorted(submissions, key=lambda s: s[1])
+        fails = list(getattr(self, "failures", []))
+        heapq.heapify(fails)
+        idx = 0
+        while idx < len(pending) or self.queue or self.running:
+            self.n_events += 1
+            if not self.running and idx >= len(pending) and self.queue \
+                    and not fails:
+                self.unschedulable.extend(self.queue)
+                self.queue.clear()
+                break
+            next_sub = pending[idx][1] if idx < len(pending) else None
+            next_fail = fails[0][0] if fails else None
             next_fin = None
             if self.running:
                 next_fin = min(self.now + jr.remaining / jr.speed
@@ -313,33 +544,29 @@ class Simulator:
             for jr in self.running:
                 jr.remaining -= dt * jr.speed
             self.now = t_next
+            for jr in self.running:
+                jr._synced_t = self.now
             # completions
             finished = [jr for jr in self.running if jr.remaining <= 1e-9]
             for jr in finished:
                 jr.finish_t = self.now
-                self.running.remove(jr)
                 self.done.append(jr)
-                self._unpin_domains(jr)
-                for w in jr.workers:
-                    self.cluster.node(w.node).used -= w.n_tasks
-                    self.bound[w.node].remove(w)
+                self._on_stop(jr, None)
             # node failures / recoveries
-            while fidx < len(failures) and \
-                    failures[fidx][0] <= self.now + 1e-12:
-                _, node_name, down_for = failures[fidx]
-                self._fail_node(node_name, down_for, failures)
-                fidx += 1
-                failures.sort()
+            while fails and fails[0][0] <= self.now + 1e-12:
+                _, node_name, down_for = heapq.heappop(fails)
+                self._fail_node(node_name, down_for, fails, None)
             # submissions
             while idx < len(pending) and pending[idx][1] <= self.now + 1e-12:
                 self.submit(pending[idx][0], pending[idx][1])
                 idx += 1
-            self._try_admit()
+            self._try_admit(None, use_index=False)
             self._refresh_speeds()
         return self.done
 
     # ---------------- fault handling ---------------------------------------
-    def _fail_node(self, node_name: str, down_for: float, failures):
+    def _fail_node(self, node_name: str, down_for: float, fails,
+                   dirty_nodes: Optional[set]):
         """Host failure: every gang touching the node is killed and
         re-queued, resuming from its last checkpoint (work quantized to
         ``ckpt_interval`` — the recomputation shows up in response time).
@@ -348,13 +575,17 @@ class Simulator:
         if down_for < 0:                        # recovery
             node.n_slots = -int(down_for)
             return
-        victims = [jr for jr in self.running if node_name in jr.nodes_used]
+        if node.n_slots == 0:
+            # the node is already down: nothing to kill, and its pending
+            # recovery stands.  (Scheduling another recovery here would
+            # encode "restore 0 slots" as -0.0, which the `< 0` recovery
+            # check misreads as a failure — an infinite self-re-push.)
+            return
+        on_node = self._node_jobs.get(node_name, set())
+        victims = [jr for jr in self.running if jr in on_node]
         for jr in victims:
-            self.running.remove(jr)
-            self._unpin_domains(jr)
-            for w in jr.workers:
-                self.cluster.node(w.node).used -= w.n_tasks
-                self.bound[w.node].remove(w)
+            self._sync(jr)
+            self._on_stop(jr, dirty_nodes)
             done_work = jr.job.base_runtime - jr.remaining
             ck = self.sc.ckpt_interval
             saved = (done_work // ck) * ck if ck > 0 else 0.0
@@ -363,8 +594,8 @@ class Simulator:
             self.queue.insert(0, jr)            # resumes with priority
         self.preempted = getattr(self, "preempted", 0) + len(victims)
         # take the node down; schedule its recovery as a pseudo-failure
-        failures.append((self.now + down_for, node_name,
-                         -float(node.n_slots)))
+        heapq.heappush(fails, (self.now + down_for, node_name,
+                               -float(node.n_slots)))
         node.n_slots = 0
 
     # ---------------- metrics ---------------------------------------------

@@ -13,10 +13,17 @@ Algorithm 4 scoring for (worker, node):
     +1 for every already-bound same-group worker on the node   (affinity)
     +len(group) base score                                     (remaining)
     -1 for every *other* group present on the node             (anti-affinity)
+
+Fleet-scale implementation notes: bound workers are tracked in a
+:class:`BoundIndex` — per-node identity sets plus per-node
+``(job, group) -> count`` maps — so a scoring decision reads O(1) state per
+candidate node instead of rescanning bound lists, and candidate nodes come
+from the cluster's free-capacity bucket index instead of an O(N) scan.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.cluster import Cluster, Node
@@ -33,15 +40,78 @@ class Group:
         return sum(w.cpu for w in self.workers)
 
 
+class BoundIndex:
+    """Per-node view of bound workers, shared by the simulator and the
+    task-group scorer.
+
+    ``workers[node]`` is a set (O(1) add/remove — the seed used O(W) list
+    membership); ``counts[node]`` is the ``(job, group) -> count`` map that
+    Algorithm 4 reads, maintained incrementally instead of rebuilt per
+    scheduling decision.
+    """
+
+    __slots__ = ("workers", "counts", "by_key")
+
+    def __init__(self):
+        self.workers: Dict[str, set] = {}
+        self.counts: Dict[str, Dict] = {}
+        self.by_key: Dict[tuple, set] = {}   # (job, group) -> {node names}
+
+    def add(self, w: WorkerSpec):
+        self.workers.setdefault(w.node, set()).add(w)
+        c = self.counts.setdefault(w.node, {})
+        key = (w.job, w.group)
+        c[key] = c.get(key, 0) + 1
+        self.by_key.setdefault(key, set()).add(w.node)
+
+    def remove(self, w: WorkerSpec):
+        ws = self.workers.get(w.node)
+        if ws is not None:
+            ws.discard(w)
+        c = self.counts.get(w.node)
+        if c is not None:
+            key = (w.job, w.group)
+            left = c.get(key, 0) - 1
+            if left > 0:
+                c[key] = left
+            else:
+                c.pop(key, None)
+                nodes = self.by_key.get(key)
+                if nodes is not None:
+                    nodes.discard(w.node)
+                    if not nodes:
+                        del self.by_key[key]
+
+    def get(self, node_name: str, default=()):
+        """Dict-compatible accessor used by :func:`node_score`."""
+        ws = self.workers.get(node_name)
+        return ws if ws is not None else default
+
+
 def build_groups(n_groups: int, workers: Sequence[WorkerSpec]) -> List[Group]:
-    """Algorithm 3, step 1: balanced group construction."""
+    """Algorithm 3, step 1: balanced group construction.
+
+    Running per-group load totals make this O(W x G) instead of the seed's
+    O(W^2) (which re-summed every group's resource_request per worker);
+    the running sums accumulate in the same order, so selection is
+    identical."""
     groups = [Group(i) for i in range(n_groups)]
+    loads = [0.0] * n_groups
     for w in workers:
         # sortGroupByResourceRequests + take the group needing more work
-        target = min(groups, key=lambda g: (g.resource_request, g.index))
-        w.group = target.index
-        target.workers.append(w)
+        gi = min(range(n_groups), key=loads.__getitem__)
+        w.group = gi
+        groups[gi].workers.append(w)
+        loads[gi] += w.cpu
     return groups
+
+
+def make_plan(workers: Sequence[WorkerSpec], n_groups: int):
+    """Precompute the (groups, ordered-workers) placement plan for a gang —
+    deterministic given the workers, so the simulator caches it across
+    blocked-head admission retries."""
+    groups = build_groups(n_groups, workers)
+    return groups, worker_order(groups)
 
 
 def worker_order(groups: Sequence[Group]) -> List[WorkerSpec]:
@@ -58,10 +128,12 @@ def default_predicate(worker: WorkerSpec, node: Node) -> bool:
 
 
 def node_score(worker: WorkerSpec, node: Node, groups: Sequence[Group],
-               bound: Dict[str, List[WorkerSpec]]) -> float:
-    """Algorithm 4 — NodeOrderFn."""
+               bound) -> float:
+    """Algorithm 4 — NodeOrderFn.  ``bound`` is a per-node mapping of bound
+    workers: either a plain ``{node: [WorkerSpec]}`` dict or a
+    :class:`BoundIndex`."""
     group = groups[worker.group]
-    on_node = bound.get(node.name, [])
+    on_node = bound.get(node.name, ())
     score = 0.0
     # step 1: same-group workers already bound to this node
     for w in on_node:
@@ -76,57 +148,160 @@ def node_score(worker: WorkerSpec, node: Node, groups: Sequence[Group],
     return score
 
 
-def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
-                 n_groups: int,
-                 predicate: Optional[Callable] = None,
-                 bound: Optional[Dict[str, List[WorkerSpec]]] = None,
-                 commit: bool = True) -> Optional[List[WorkerSpec]]:
-    """Algorithms 3+4 end-to-end for one job (gang semantics).
-
-    Returns the workers with ``node`` assigned, or None if the gang does not
-    fit (nothing is committed in that case).  Scoring uses incremental
-    per-node (job, group) count maps, so a decision is O(workers x nodes)
-    dict lookups — measured at ~ms/job on 4096-host fleets
-    (benchmarks/sched_efficiency.py).
-    """
-    predicate = predicate or default_predicate
-    bound = bound if bound is not None else {}
-    groups = build_groups(n_groups, workers)
-    ordered = worker_order(groups)
-
-    staged: Dict[str, int] = {}
-    # per-node {(job, group): worker count} — the only state Algorithm 4
-    # reads; kept incrementally instead of rescanning bound lists
+def _counts_from_lists(bound: Dict[str, List[WorkerSpec]]) -> Dict[str, Dict]:
     counts: Dict[str, Dict] = {}
     for node, ws in bound.items():
         c = counts.setdefault(node, {})
         for w in ws:
             c[(w.job, w.group)] = c.get((w.job, w.group), 0) + 1
+    return counts
+
+
+def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
+                 n_groups: int,
+                 predicate: Optional[Callable] = None,
+                 bound=None,
+                 commit: bool = True,
+                 use_index: bool = True,
+                 plan=None) -> Optional[List[WorkerSpec]]:
+    """Algorithms 3+4 end-to-end for one job (gang semantics).
+
+    Returns the workers with ``node`` assigned, or None if the gang does not
+    fit (nothing is committed in that case).
+
+    ``bound`` may be a :class:`BoundIndex` (whose count maps are read
+    directly — nothing is rebuilt) or a plain ``{node: [workers]}`` dict
+    (counts are derived once, the seed behaviour).  With ``use_index`` and
+    no custom predicate, candidate nodes come from the cluster's
+    free-capacity buckets, so a decision costs O(workers x feasible nodes)
+    instead of O(workers x all nodes); scoring is O(1) per candidate via
+    ``len(counts)`` + a small staged overlay; and two O(1) capacity
+    pre-checks (gang total vs free slots, biggest worker vs emptiest node)
+    reject hopeless gangs without touching any node.  ``plan`` is an
+    optional precomputed ``make_plan`` result (the simulator caches it
+    across blocked-head retries).  ``use_index=False`` restores the seed's
+    full O(workers x N) scan (kept for the ``--legacy`` benchmark
+    baseline).
+    """
+    workers = list(workers)
+    indexed = use_index and predicate is None
+    if indexed:
+        # O(1) gang pre-rejects: total demand vs total free, and the
+        # biggest worker vs the emptiest node (both necessary conditions)
+        if sum(w.n_tasks for w in workers) > cluster.free_slots:
+            return None
+        if max(w.n_tasks for w in workers) > cluster.max_free():
+            return None
+    predicate = predicate or default_predicate
+    if bound is None:
+        bound = {}
+    if plan is not None:
+        groups, ordered = plan
+    else:
+        groups, ordered = make_plan(workers, n_groups)
+
+    is_bindex = isinstance(bound, BoundIndex)
+    base_counts = bound.counts if is_bindex else _counts_from_lists(bound)
+    # capacity + (job, group) counts staged by earlier workers of this gang;
+    # overlaid on base_counts so persistent state is untouched until commit
+    staged: Dict[str, int] = {}
+    staged_counts: Dict[str, Dict] = {}
+    empty: Dict = {}
+    bc_get = base_counts.get
+    st_get = staged.get
+    sc_get = staged_counts.get
     placed: List[WorkerSpec] = []
+    walk_cache: Dict[int, list] = {}
+
+    def full_score(name, key_w, gsize):
+        """Algorithm 4 score with the staged overlay merged in — exactly
+        the seed's rescan over merged per-node counts."""
+        base = bc_get(name, empty)
+        over = sc_get(name)
+        score = base.get(key_w, 0) + gsize \
+            - (len(base) - (1 if key_w in base else 0))
+        if over:
+            score += over.get(key_w, 0) \
+                - sum(1 for k in over if k != key_w and k not in base)
+        return score
+
     for w in ordered:
         gsize = len(groups[w.group].workers)
         key_w = (w.job, w.group)
-        best, best_score = None, None
-        for idx, n in enumerate(cluster.nodes):
-            if not predicate(w, n) or \
-                    n.free - staged.get(n.name, 0) < w.n_tasks:
-                continue
-            c = counts.get(n.name, {})
-            score = c.get(key_w, 0) + gsize \
-                - sum(1 for k in c if k != key_w)
-            rank = (score, -idx)
-            if best is None or rank > best_score:
-                best, best_score = n, rank
+        need = w.n_tasks
+        best, best_rank = None, None
+        if indexed and is_bindex:
+            # Heap-walk argmax.  A node neither staged by this gang nor
+            # holding key_w ("plain") scores exactly gsize - len(counts),
+            # so the best plain node is the min-(len(counts), idx) heap
+            # top.  Staged nodes are special for the rest of the gang and
+            # are popped for good; nodes holding key_w (same-(job,group)
+            # collisions) are scored exactly in the specials loop, and
+            # their true score strictly dominates their plain rank, so a
+            # collision at the heap top can only lose to its own specials
+            # entry — skipping the peek is exact.  Per gang this is
+            # O(F + W·(log F + specials)) instead of O(W·F).
+            heap = walk_cache.get(need)
+            if heap is None:
+                heap = [(len(bc_get(n.name, empty)), i, n.name)
+                        for i, n in cluster.free_ge_items(need)]
+                heapq.heapify(heap)
+                walk_cache[need] = heap
+            collide = bound.by_key.get(key_w, empty)
+            for name in staged:
+                n = cluster.node(name)
+                if n.n_slots - n.used - staged[name] < need:
+                    continue
+                rank = (full_score(name, key_w, gsize),
+                        -cluster.node_index(name))
+                if best is None or rank > best_rank:
+                    best, best_rank = n, rank
+            for name in collide:
+                if name in staged:
+                    continue                 # handled above
+                n = cluster.node(name)
+                if n.n_slots - n.used < need:
+                    continue
+                rank = (full_score(name, key_w, gsize),
+                        -cluster.node_index(name))
+                if best is None or rank > best_rank:
+                    best, best_rank = n, rank
+            while heap and heap[0][2] in staged:
+                heapq.heappop(heap)          # staged: special from now on
+            if heap:
+                L, idx, name = heap[0]
+                if name not in collide:
+                    rank = (gsize - L, -idx)
+                    if best is None or rank > best_rank:
+                        best, best_rank = cluster.node(name), rank
+        else:
+            if indexed:
+                candidates = cluster.free_ge_items(need)
+            else:
+                candidates = enumerate(cluster.nodes)
+            for idx, n in candidates:
+                if not indexed and not predicate(w, n):
+                    continue
+                name = n.name
+                if n.n_slots - n.used - st_get(name, 0) < need:
+                    continue
+                rank = (full_score(name, key_w, gsize), -idx)
+                if best is None or rank > best_rank:
+                    best, best_rank = n, rank
         if best is None:
             return None                      # gang fails — do not commit
         w.node = best.name
-        staged[best.name] = staged.get(best.name, 0) + w.n_tasks
-        c = counts.setdefault(best.name, {})
-        c[key_w] = c.get(key_w, 0) + 1
+        staged[best.name] = staged.get(best.name, 0) + need
+        oc = staged_counts.setdefault(best.name, {})
+        oc[key_w] = oc.get(key_w, 0) + 1
         placed.append(w)
 
     if commit:
+        is_index = isinstance(bound, BoundIndex)
         for w in placed:
             cluster.node(w.node).used += w.n_tasks
-            bound.setdefault(w.node, []).append(w)
+            if is_index:
+                bound.add(w)
+            else:
+                bound.setdefault(w.node, []).append(w)
     return placed

@@ -1,0 +1,21 @@
+"""Pallas-TPU version compatibility.
+
+jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+this repo's kernels are written against the new name.  Import
+``CompilerParams`` from here so they run on both.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+
+if CompilerParams is None:
+    def CompilerParams(*_args, **_kwargs):    # noqa: F811 — fallback stub
+        """Fail at kernel-call time (imports stay collectable) with the
+        actual cause instead of a NoneType error at the call site."""
+        import jax
+        raise ImportError(
+            f"jax {jax.__version__}: jax.experimental.pallas.tpu exposes "
+            "neither CompilerParams (jax >= 0.5) nor TPUCompilerParams "
+            "(jax 0.4.x); Pallas TPU kernels cannot be configured on this "
+            "version.")

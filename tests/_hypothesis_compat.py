@@ -1,0 +1,60 @@
+"""Use hypothesis when installed, else a thin deterministic fallback.
+
+The fallback implements exactly what this suite uses — ``given`` with
+``st.integers`` / ``st.sampled_from`` strategies and a no-op ``settings``
+decorator — by running each property on a bounded number of seeded
+pseudo-random examples.  No shrinking, no database: just enough to keep the
+property tests meaningful on machines without hypothesis installed.
+"""
+try:
+    from hypothesis import given, settings, strategies as st   # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import types
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    st = types.SimpleNamespace(integers=_integers,
+                               sampled_from=_sampled_from)
+
+    def settings(max_examples=None, **_ignored):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            limit = getattr(fn, "_fallback_max_examples", None)
+            limit = min(limit or _FALLBACK_MAX_EXAMPLES,
+                        _FALLBACK_MAX_EXAMPLES)
+
+            @functools.wraps(fn)
+            def wrapper():
+                rng = random.Random(0xC0FFEE)
+                for _ in range(limit):
+                    args = [s.draw(rng) for s in arg_strategies]
+                    kwargs = {k: s.draw(rng)
+                              for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+
+            # hide the property's parameters from pytest's fixture resolver
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

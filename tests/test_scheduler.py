@@ -2,7 +2,7 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cluster import Cluster, Node, paper_cluster
 from repro.core.controller import (WorkerSpec, allocate_tasks, hostfile,

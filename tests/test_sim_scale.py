@@ -1,0 +1,197 @@
+"""Fleet-scale simulator core: equivalence + performance.
+
+The heap event loop (finish-time heap, dirty-set speed refresh, incremental
+mem load, indexed cluster) must produce the *same traces* as the seed's
+full-rescan loop (``run(..., legacy=True)``): identical placements, start
+times, finish times, response times and unschedulable sets — FP-tolerant
+only in the timestamps (the legacy loop integrates progress with one
+subtraction per event, the heap loop with one multiply per speed change).
+"""
+import dataclasses as dc
+import random
+import time
+
+import pytest
+
+from repro.core.cluster import Cluster, Node, paper_cluster
+from repro.core.profiles import PAPER_BENCHMARKS, Profile, Workload
+from repro.core.scenarios import (SCENARIOS, FLEET_WORKLOADS,
+                                  poisson_heavy_traffic)
+from repro.core.simulator import Simulator
+
+
+def exp2_subs(seed):
+    rng = random.Random(seed)
+    jobs = [w for w in PAPER_BENCHMARKS.values() for _ in range(4)]
+    rng.shuffle(jobs)
+    times = sorted(rng.uniform(0, 1200) for _ in jobs)
+    return list(zip(jobs, times))
+
+
+def small_fleet(n_hosts=32):
+    return Cluster([Node(f"h{i}", n_slots=4, n_domains=1)
+                    for i in range(n_hosts)])
+
+
+def trace_of(sim, done):
+    """Canonical per-job trace: (name, submit) -> placement + timings."""
+    jobs = sorted(
+        ((j.job.name, j.submit_t, j.start_t, j.finish_t,
+          tuple(sorted(j.nodes_used.items()))) for j in done),
+        key=lambda t: (t[0], t[1]))
+    unsched = sorted((j.job.name, j.submit_t) for j in sim.unschedulable)
+    return jobs, unsched
+
+
+def assert_equivalent(mk_sim, submissions):
+    s_new = mk_sim()
+    d_new = s_new.run(list(submissions))
+    s_old = mk_sim()
+    d_old = s_old.run(list(submissions), legacy=True)
+    jobs_new, uns_new = trace_of(s_new, d_new)
+    jobs_old, uns_old = trace_of(s_old, d_old)
+    assert len(jobs_new) == len(jobs_old)
+    assert uns_new == uns_old
+    for a, b in zip(jobs_new, jobs_old):
+        assert a[0] == b[0]                       # same job
+        assert a[4] == b[4]                       # identical placement
+        assert a[1] == pytest.approx(b[1], rel=1e-9, abs=1e-6)  # submit
+        assert a[2] == pytest.approx(b[2], rel=1e-9, abs=1e-6)  # start
+        assert a[3] == pytest.approx(b[3], rel=1e-9, abs=1e-6)  # finish
+    return s_new, s_old
+
+
+# ----------------------------------------------------------------------
+# trace equivalence, paper scale
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("scn", ["NONE", "CM", "CM_S", "CM_G", "CM_S_TG",
+                                 "CM_G_TG", "Volcano", "Kubeflow"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_heap_loop_matches_legacy_paper_scale(scn, seed):
+    assert_equivalent(
+        lambda: Simulator(paper_cluster(), SCENARIOS[scn], seed=seed),
+        exp2_subs(seed))
+
+
+def test_heap_loop_matches_legacy_with_failures():
+    fails = [(200.0, "node0", 300.0), (450.0, "node1", 200.0)]
+
+    def mk():
+        sim = Simulator(paper_cluster(), SCENARIOS["CM_G_TG"], seed=0)
+        sim.failures = list(fails)
+        return sim
+
+    s_new, s_old = assert_equivalent(mk, exp2_subs(0))
+    assert s_new.preempted == s_old.preempted >= 1
+
+
+def test_heap_loop_matches_legacy_with_backfill():
+    scn = dc.replace(SCENARIOS["CM_G"], backfill=True)
+    big = Workload("big", Profile.CPU, 112, 400.0)
+    small = Workload("small", Profile.CPU, 16, 100.0)
+    subs = [(big, 0.0), (big, 1.0), (small, 2.0), (small, 3.0)]
+    assert_equivalent(lambda: Simulator(paper_cluster(), scn, seed=0), subs)
+
+
+def test_heap_loop_matches_legacy_fleet_heavy_traffic():
+    subs = poisson_heavy_traffic(150, 128, seed=3)
+    assert_equivalent(
+        lambda: Simulator(small_fleet(32), SCENARIOS["CM_G_TG"], seed=0),
+        subs)
+
+
+def test_unschedulable_matches_legacy():
+    """A gang that can never fit must land in ``unschedulable`` in both
+    loops (here: a 16-slot coarse worker on 4-chip hosts)."""
+    coarse = Workload("coarse-net", Profile.NETWORK, 16, 100.0)
+    ok = Workload("fine-cpu", Profile.CPU, 8, 50.0)
+    subs = [(ok, 0.0), (coarse, 1.0), (ok, 2.0)]
+    s_new, s_old = assert_equivalent(
+        lambda: Simulator(small_fleet(8), SCENARIOS["CM_G_TG"], seed=0),
+        subs)
+    # the impossible gang AND the fine job stuck behind it (FIFO head-of-
+    # line) are both reported, in both loops
+    assert sorted(j.job.name for j in s_new.unschedulable) == \
+        ["coarse-net", "fine-cpu"]
+
+
+# ----------------------------------------------------------------------
+# failure-queue ordering regression (the seed's failures.sort() bug)
+# ----------------------------------------------------------------------
+def test_zero_downtime_failure_recovers_node():
+    """A transient blip (down_for=0) used to make the seed loop re-sort the
+    failure list into an already-consumed index: the failure entry was
+    reprocessed forever (appending a fresh recovery each time — an infinite
+    loop).  The time-ordered heap processes fail + recovery exactly once."""
+    w = PAPER_BENCHMARKS["EP-DGEMM"]
+    sim = Simulator(paper_cluster(), SCENARIOS["CM_G_TG"], seed=0)
+    sim.failures = [(100.0, "node0", 0.0)]
+    done = sim.run([(w, 0.0), (w, 0.0)])
+    assert len(done) == 2
+    assert not sim.unschedulable
+    assert sim.cluster.node("node0").n_slots == 32    # recovered
+
+
+def test_failure_on_already_down_node_does_not_hang():
+    """A second failure hitting a node that is still down used to schedule
+    a 'restore 0 slots' recovery encoded as -0.0, which the `< 0` recovery
+    check misreads as a failure — re-pushing itself at the same timestamp
+    forever.  It must be a no-op (the first recovery stands), in both
+    loops."""
+    w = PAPER_BENCHMARKS["EP-DGEMM"]
+    for legacy in (False, True):
+        sim = Simulator(paper_cluster(), SCENARIOS["CM_G_TG"], seed=0)
+        sim.failures = [(100.0, "node0", 100.0), (120.0, "node0", 20.0)]
+        done = sim.run([(w, 0.0), (w, 0.0)], legacy=legacy)
+        assert len(done) == 2
+        assert sim.cluster.node("node0").n_slots == 32
+
+
+def test_failure_heap_handles_recovery_between_failures():
+    """Recovery events interleaved between pending failures are processed
+    in time order (no skip / double-process)."""
+    w = PAPER_BENCHMARKS["EP-DGEMM"]
+    sim = Simulator(paper_cluster(), SCENARIOS["CM_G_TG"], seed=0)
+    sim.failures = [(100.0, "node0", 50.0), (120.0, "node1", 50.0),
+                    (130.0, "node2", 10.0)]
+    done = sim.run([(w, 0.0), (w, 60.0), (w, 120.0)])
+    assert len(done) == 3
+    for name in ("node0", "node1", "node2"):
+        assert sim.cluster.node(name).n_slots == 32
+    assert sim.cluster.free_slots == sim.cluster.total_slots
+
+
+# ----------------------------------------------------------------------
+# incremental-state invariants after a full run
+# ----------------------------------------------------------------------
+def test_incremental_state_drains_clean():
+    sim = Simulator(small_fleet(16), SCENARIOS["CM_G_TG"], seed=0)
+    sim.run(poisson_heavy_traffic(80, 64, seed=1))
+    assert not sim.running
+    assert sim.cluster.free_slots == sim.cluster.total_slots
+    assert not sim._mem_load_live
+    assert not sim._node_jobs
+    assert all(not ws for ws in sim.bound.workers.values())
+    assert all(not c for c in sim.bound.counts.values())
+    assert not sim.bound.by_key
+
+
+# ----------------------------------------------------------------------
+# performance smoke: the 1024-host heavy-traffic benchmark must complete
+# well under budget (the seed loop takes >30s on the same input)
+# ----------------------------------------------------------------------
+def test_fleet_1024_hosts_under_budget():
+    sim_scale = pytest.importorskip("benchmarks.sim_scale")
+    t0 = time.perf_counter()
+    r = sim_scale.run_once(1024, 1500, seed=0)
+    wall = time.perf_counter() - t0
+    assert r["completed"] == 1500
+    assert wall < 30.0, f"1024-host benchmark took {wall:.1f}s"
+
+
+@pytest.mark.slow
+def test_fleet_4096_hosts_10k_jobs_completes():
+    sim_scale = pytest.importorskip("benchmarks.sim_scale")
+    r = sim_scale.run_once(4096, 10000, seed=0)
+    assert r["completed"] + r["unschedulable"] == 10000
+    assert r["unschedulable"] == 0
