@@ -1,9 +1,15 @@
-"""Beyond-paper scheduler extension: EASY-style backfill vs FIFO gang.
+"""Beyond-paper scheduler extension: backfill disciplines vs FIFO gang.
 
 The paper's Volcano baseline (and our faithful reproduction) admits gangs
 strictly FIFO — a blocked wide gang head-of-line-blocks everything behind
-it.  This benchmark quantifies the skip-ahead backfill extension on a mix
-of wide and narrow jobs.
+it.  This benchmark quantifies two skip-ahead extensions on a mix of wide
+and narrow jobs:
+
+* ``backfill`` — the seed's unrestricted skip-ahead (anything that fits now
+  starts; a wide head can be delayed indefinitely);
+* ``easy``     — EASY backfill (``placement="easy-backfill"``): the blocked
+  head holds a shadow-time reservation that backfilled jobs may not delay,
+  and admission attempts only demand-feasible candidates per event.
 """
 from __future__ import annotations
 
@@ -30,7 +36,9 @@ def run(csv_rows=None):
     print("\n== Backfill vs FIFO gang (beyond-paper) ==")
     base = SCENARIOS["CM_G_TG"]
     for name, scn in [("FIFO", base),
-                      ("backfill", dataclasses.replace(base, backfill=True))]:
+                      ("backfill", dataclasses.replace(base, backfill=True)),
+                      ("easy", dataclasses.replace(
+                          base, placement="easy-backfill"))]:
         t0 = time.time()
         resp = mk = nar = 0.0
         seeds = 5

@@ -3,21 +3,39 @@
 Drives the discrete-event simulator under Poisson heavy-traffic arrivals
 (``repro.core.scenarios.poisson_heavy_traffic``) across 256/1024/4096-host
 fleets and emits ``BENCH_sim_scale.json`` with per-size wall time, µs/event
-and jobs/sec, plus the speedup of the default (heap + dirty-set + indexed
-cluster) loop over the ``--legacy`` seed loop (full min-scan, full speed
-refresh, O(N) feasibility scans per worker).
+and jobs/sec, plus the speedup of the default (heap + dirty-set + Fenwick-
+indexed cluster) loop over the ``--legacy`` seed loop (full min-scan, full
+speed refresh, O(N) feasibility scans per worker).
 
-  python -m benchmarks.sim_scale [--smoke] [--no-legacy] [--scenario CM_G_TG]
+Four sweep modes per fleet size:
 
-The legacy comparison runs at the sizes in ``LEGACY_SIZES`` (the seed loop
-is quadratic — running it at 4096 hosts would dominate the benchmark's
-runtime without adding information).
+* ``heap``      — CM_G_TG, default event loop (the PR-1 acceptance row)
+* ``legacy``    — same scenario on the seed loop (at ``LEGACY_SIZES`` only:
+                  the seed loop is quadratic)
+* ``easy``      — FLEET_EASY: per-submission JobIds + EASY backfill
+                  reservations (the pluggable-policy row)
+* ``easy_fail`` — FLEET_EASY with ~2% of hosts failing mid-run: the
+                  failures + backfill fleet scenario
+
+The (hosts, mode) matrix can run across worker *processes* (the cells are
+independent simulations).  Concurrent cells contend for cores, which
+inflates per-cell wall times even though the sweep finishes sooner — so
+the *full* sweep (the one that records ``BENCH_sim_scale.json``) defaults
+to serial and ``--parallel`` opts in, while ``--smoke`` sweeps (CI
+freshness checks, not timing records) default to parallel and ``--serial``
+opts out.
+
+  python -m benchmarks.sim_scale [--smoke] [--no-legacy]
+                                 [--serial | --parallel]
+                                 [--scenario CM_G_TG]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
+from concurrent.futures import ProcessPoolExecutor
 
 from repro.core.cluster import Cluster, Node
 from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
@@ -28,6 +46,9 @@ from repro.core.simulator import Simulator
 SIZES = ((256, 2000), (1024, 3000), (4096, 10000))
 LEGACY_SIZES = (256, 1024)
 SMOKE_SIZES = ((64, 300),)
+EASY_SCENARIO = "FLEET_EASY"
+FAIL_FRACTION = 0.02          # hosts failing in the easy_fail mode
+FAIL_DOWNTIME = 300.0
 
 
 def fleet(n_hosts: int, slots: int = 4) -> Cluster:
@@ -35,11 +56,26 @@ def fleet(n_hosts: int, slots: int = 4) -> Cluster:
                     for i in range(n_hosts)])
 
 
+def _failure_plan(n_hosts: int, subs, seed: int):
+    """Deterministic host-failure schedule: ``FAIL_FRACTION`` of hosts die
+    at uniform times inside the arrival window, each down for
+    ``FAIL_DOWNTIME`` seconds."""
+    import random
+    rng = random.Random(seed + 0xFA11)
+    span = subs[-1][1] if subs else 0.0
+    n_fail = max(1, int(n_hosts * FAIL_FRACTION))
+    hosts = rng.sample(range(n_hosts), n_fail)
+    return [(rng.uniform(0.1 * span, 0.9 * span), f"h{h}", FAIL_DOWNTIME)
+            for h in sorted(hosts)]
+
+
 def run_once(n_hosts: int, n_jobs: int, seed: int = 0, legacy: bool = False,
-             scenario: str = "CM_G_TG") -> dict:
+             scenario: str = "CM_G_TG", failures: bool = False) -> dict:
     cluster = fleet(n_hosts)
     subs = poisson_heavy_traffic(n_jobs, cluster.total_slots, seed=seed)
     sim = Simulator(cluster, SCENARIOS[scenario], seed=seed)
+    if failures:
+        sim.failures = _failure_plan(n_hosts, subs, seed)
     t0 = time.perf_counter()
     done = sim.run(subs, legacy=legacy)
     wall = time.perf_counter() - t0
@@ -48,6 +84,8 @@ def run_once(n_hosts: int, n_jobs: int, seed: int = 0, legacy: bool = False,
         "jobs": n_jobs,
         "mode": "legacy" if legacy else "heap",
         "scenario": scenario,
+        "failures": len(getattr(sim, "failures", [])) if failures else 0,
+        "preempted": getattr(sim, "preempted", 0),
         "completed": len(done),
         "unschedulable": len(sim.unschedulable),
         "events": sim.n_events,
@@ -58,31 +96,60 @@ def run_once(n_hosts: int, n_jobs: int, seed: int = 0, legacy: bool = False,
     }
 
 
+def _run_cell(cell) -> dict:
+    """One (hosts, jobs, mode) sweep cell — top-level for pickling."""
+    hosts, jobs, mode, scenario = cell
+    r = run_once(hosts, jobs,
+                 legacy=(mode == "legacy"),
+                 scenario=(EASY_SCENARIO if mode.startswith("easy")
+                           else scenario),
+                 failures=(mode == "easy_fail"))
+    r["mode"] = mode
+    return r
+
+
+def _cells(sizes, legacy_sizes, scenario):
+    out = []
+    for hosts, jobs in sizes:
+        out.append((hosts, jobs, "heap", scenario))
+        if hosts in legacy_sizes:
+            out.append((hosts, jobs, "legacy", scenario))
+        out.append((hosts, jobs, "easy", scenario))
+        out.append((hosts, jobs, "easy_fail", scenario))
+    return out
+
+
 def run(csv_rows=None, smoke: bool = False, legacy: bool = True,
-        scenario: str = "CM_G_TG", out_path: str = None):
+        scenario: str = "CM_G_TG", out_path: str = None,
+        parallel: bool = None):
+    if parallel is None:   # timing records must not be contention-inflated
+        parallel = smoke
     if out_path is None:   # smoke sweeps must not clobber the full record
         out_path = ("BENCH_sim_scale_smoke.json" if smoke
                     else "BENCH_sim_scale.json")
     sizes = SMOKE_SIZES if smoke else SIZES
     legacy_sizes = ({s for s, _ in SMOKE_SIZES} if smoke
                     else set(LEGACY_SIZES)) if legacy else set()
+    cells = _cells(sizes, legacy_sizes, scenario)
     print("\n== Simulator scale: heap event loop vs seed loop ==")
-    print(f"{'hosts':>6s} {'jobs':>6s} {'mode':>7s} {'wall_s':>9s} "
+    print(f"{'hosts':>6s} {'jobs':>6s} {'mode':>10s} {'wall_s':>9s} "
           f"{'us/event':>9s} {'jobs/s':>8s}")
-    results = []
+    if parallel:
+        workers = min(len(cells), os.cpu_count() or 1)
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            results = list(pool.map(_run_cell, cells))
+    else:
+        results = [_run_cell(c) for c in cells]
     by_size = {}
-    for hosts, jobs in sizes:
-        for mode_legacy in ([False, True] if hosts in legacy_sizes
-                            else [False]):
-            r = run_once(hosts, jobs, legacy=mode_legacy, scenario=scenario)
-            results.append(r)
-            by_size.setdefault(hosts, {})[r["mode"]] = r
-            print(f"{hosts:6d} {jobs:6d} {r['mode']:>7s} {r['wall_s']:9.2f} "
-                  f"{r['us_per_event']:9.1f} {r['jobs_per_s']:8.1f}")
-            if csv_rows is not None:
-                csv_rows.append((f"sim_{hosts}hosts_{r['mode']}",
-                                 r["us_per_event"],
-                                 f"jobs_per_s={r['jobs_per_s']}"))
+    for r in results:
+        by_size.setdefault(r["hosts"], {})[r["mode"]] = r
+        print(f"{r['hosts']:6d} {r['jobs']:6d} {r['mode']:>10s} "
+              f"{r['wall_s']:9.2f} {r['us_per_event']:9.1f} "
+              f"{r['jobs_per_s']:8.1f}")
+        if csv_rows is not None:
+            csv_rows.append((f"sim_{r['hosts']}hosts_{r['mode']}",
+                             r["us_per_event"],
+                             f"jobs_per_s={r['jobs_per_s']}"))
     speedups = {}
     for hosts, modes in by_size.items():
         if "legacy" in modes and "heap" in modes:
@@ -106,6 +173,13 @@ def main():
     ap.add_argument("--legacy", action="store_true",
                     help="legacy baseline only (seed event loop) at all "
                          "sizes — slow; for manual A/B runs")
+    ap.add_argument("--serial", action="store_true",
+                    help="force the in-process sweep (accurate per-cell "
+                         "timings; the default for full sweeps)")
+    ap.add_argument("--parallel", action="store_true",
+                    help="force the across-processes sweep (faster wall "
+                         "clock, contended timings; the default for "
+                         "--smoke)")
     ap.add_argument("--scenario", default="CM_G_TG",
                     choices=sorted(SCENARIOS))
     ap.add_argument("--out", default=None,
@@ -118,7 +192,9 @@ def main():
             print(r)
         return
     run(smoke=args.smoke, legacy=not args.no_legacy,
-        scenario=args.scenario, out_path=args.out)
+        scenario=args.scenario, out_path=args.out,
+        parallel=(True if args.parallel else
+                  (False if args.serial else None)))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,63 @@
+"""Cross-version JAX API shims (0.4.x <-> 0.5+).
+
+The repo is written against the current JAX surface; this module maps the
+handful of renamed/moved entry points back onto what the installed version
+actually provides, so the same source runs on the baked-in 0.4.x toolchain:
+
+* ``shard_map``     — ``jax.shard_map(..., check_vma=)`` (new) vs
+                      ``jax.experimental.shard_map.shard_map(..., check_rep=)``
+* ``make_mesh``     — ``axis_types=`` (and ``jax.sharding.AxisType``) only
+                      exist on newer versions; older ones build the same
+                      mesh without the kwarg (Auto is the old default).
+* ``mesh_context``  — ``jax.set_mesh(mesh)`` (new) vs entering the ``Mesh``
+                      itself as a context manager (the pjit-era spelling).
+
+Sibling of ``repro.kernels.pltpu_compat`` (the Pallas-TPU shim).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` is the new name of ``check_rep``; the semantics match.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as sm_old
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(axis_type.Auto,)
+                                 * len(axis_names))
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def axis_size(name) -> int:
+    """``jax.lax.axis_size`` (new) — older versions use the ``psum(1, ax)``
+    idiom, which constant-folds to the axis size inside shard_map/pmap."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    return jax.lax.psum(1, name)
+
+
+def mesh_context(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh           # Mesh is itself a context manager on 0.4.x

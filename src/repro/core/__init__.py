@@ -1,23 +1,51 @@
 """The paper's contribution: two-layer fine-grained scheduling.
 
-Application layer: ``planner`` (Algorithm 1 — granularity selection from the
-job profile).  Infrastructure layer: ``controller`` (Algorithm 2 — MPI-aware
-task->worker mapping, resources, hostfile), ``taskgroup`` (Algorithms 3+4 —
-balanced groups with node affinity/anti-affinity scoring), gang admission in
-``simulator``.  ``meshplan`` binds the same decisions to JAX meshes/sharding
-for real jobs; ``simulator``+``scenarios`` reproduce the paper's evaluation.
+**Application layer** — decides *what to ask for*, per job, from the job's
+own profile:
+
+* ``planner`` (Algorithm 1) — granularity selection: the roofline-derived
+  profile (network / CPU / memory, ``profiles``) picks how many workers,
+  nodes and groups a submission should request;
+* ``controller`` (Algorithm 2) — the MPI-aware task->worker mapping,
+  per-worker resource requests and the hostfile; it also stamps the
+  per-submission JobId (``Workload.uid``) onto every worker of the gang.
+
+**Infrastructure layer** — decides *where and when* those requests run,
+with no knowledge of why they were shaped that way:
+
+* ``policies`` — pluggable :class:`~repro.core.policies.PlacementPolicy`
+  objects owning admission + binding: the K8s ``default`` scheduler
+  (random feasible placement), ``taskgroup`` (Algorithms 3+4 via
+  ``taskgroup``: balanced groups, affinity/anti-affinity scoring), and
+  ``easy-backfill`` (head-of-queue reservations, beyond-paper);
+* ``cluster`` — the node/slot/domain model with a Fenwick free-capacity
+  index serving O(log C) feasibility queries on heterogeneous fleets;
+* gang admission and the progress-based event loop live in ``simulator``.
+
+The layers meet only at the ``(Workload, Granularity, WorkerSpec)``
+hand-off, which is what makes them swappable: ``meshplan`` binds the same
+application-layer decisions to JAX meshes/sharding for real jobs, while
+``simulator``+``scenarios`` replay the paper's evaluation and the
+fleet-scale heavy-traffic scenarios against any registered policy.
 """
-from repro.core.cluster import Cluster, Node, fleet_cluster, paper_cluster
+from repro.core.cluster import (Cluster, Node, fleet_cluster, hetero_cluster,
+                                paper_cluster)
 from repro.core.controller import allocate_tasks, hostfile, make_workers
 from repro.core.planner import Granularity, select_granularity
+from repro.core.policies import (POLICIES, DefaultPolicy, EasyBackfillPolicy,
+                                 PlacementPolicy, TaskGroupPolicy,
+                                 make_policy)
 from repro.core.profiles import (PAPER_BENCHMARKS, Profile, Workload,
                                  classify_roofline)
 from repro.core.scenarios import SCENARIOS, get_scenario
 from repro.core.simulator import PerfParams, Scenario, Simulator
 from repro.core import taskgroup
 
-__all__ = ["Cluster", "Node", "fleet_cluster", "paper_cluster",
-           "allocate_tasks", "hostfile", "make_workers", "Granularity",
-           "select_granularity", "PAPER_BENCHMARKS", "Profile", "Workload",
-           "classify_roofline", "SCENARIOS", "get_scenario", "PerfParams",
-           "Scenario", "Simulator", "taskgroup"]
+__all__ = ["Cluster", "Node", "fleet_cluster", "hetero_cluster",
+           "paper_cluster", "allocate_tasks", "hostfile", "make_workers",
+           "Granularity", "select_granularity", "POLICIES",
+           "PlacementPolicy", "DefaultPolicy", "TaskGroupPolicy",
+           "EasyBackfillPolicy", "make_policy", "PAPER_BENCHMARKS",
+           "Profile", "Workload", "classify_roofline", "SCENARIOS",
+           "get_scenario", "PerfParams", "Scenario", "Simulator",
+           "taskgroup"]

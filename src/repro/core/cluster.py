@@ -12,16 +12,19 @@ The scheduler algorithms (planner / controller / task-group) are agnostic to
 which instantiation they run on — exactly the paper's layering claim.
 
 The cluster is *indexed* for fleet scale: ``node(name)`` is an O(1) dict
-lookup, ``free_slots`` is a maintained counter, and a free-capacity bucket
-index answers "which nodes have >= k free slots" without scanning all N
-nodes.  The index is kept consistent through a ``Node.__setattr__`` hook on
-``used``/``n_slots``, so existing call sites (and tests) that mutate nodes
-directly stay correct.
+lookup, ``free_slots`` is a maintained counter, and a Fenwick tree over
+free-capacity values answers "which nodes have >= k free slots" and "what is
+the largest per-node free capacity" in O(log C) (C = largest node size) —
+so the index stays cheap on *heterogeneous* fleets mixing 4-chip hosts with
+large-slot superpods, where the former per-distinct-value bucket scan
+degraded to O(C) per query.  The index is kept consistent through a
+``Node.__setattr__`` hook on ``used``/``n_slots``, so existing call sites
+(and tests) that mutate nodes directly stay correct.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 _INDEXED_FIELDS = ("used", "n_slots")
 
@@ -68,24 +71,76 @@ class Cluster:
     def __post_init__(self):
         self.rebuild_index()
 
-    # ---------------- capacity index --------------------------------------
+    # ---------------- capacity index (Fenwick over free values) -----------
     def rebuild_index(self):
-        """(Re)build the name->node map and free-capacity buckets.  Call
-        after structural changes to ``nodes`` (never needed for plain
+        """(Re)build the name->node map and the Fenwick capacity index.
+        Call after structural changes to ``nodes`` (never needed for plain
         ``used``/``n_slots`` mutations — those reindex automatically)."""
         self._by_name: Dict[str, Node] = {}
         self._node_idx: Dict[str, int] = {}
         self._free_of: Dict[str, int] = {}
-        self._buckets: Dict[int, set] = {}   # free count -> {node name}
+        self._members: Dict[int, set] = {}   # clamped free value -> names
         self._free_total = 0
+        cap = 0
+        for n in self.nodes:
+            cap = max(cap, n.n_slots, n.n_slots - n.used)
+        self._cap_max = cap
+        self._fen_size = cap + 1             # values 0..cap, 1-indexed tree
+        self._fen = [0] * (self._fen_size + 1)
+        self._fen_log = 1 << (self._fen_size.bit_length() - 1)
+        self._n_indexed = 0
         for i, n in enumerate(self.nodes):
             object.__setattr__(n, "_cluster", self)
             self._by_name[n.name] = n
             self._node_idx[n.name] = i
             f = n.n_slots - n.used
             self._free_of[n.name] = f
-            self._buckets.setdefault(f, set()).add(n.name)
+            v = self._clamp(f)
+            self._members.setdefault(v, set()).add(n.name)
+            self._fen_add(v, +1)
+            self._n_indexed += 1
             self._free_total += f
+
+    def _clamp(self, v: int) -> int:
+        return 0 if v < 0 else (self._cap_max if v > self._cap_max else v)
+
+    def _fen_add(self, v: int, d: int):
+        i = v + 1
+        fen, size = self._fen, self._fen_size
+        while i <= size:
+            fen[i] += d
+            i += i & -i
+
+    def _fen_prefix(self, v: int) -> int:
+        """Count of indexed nodes with clamped free value <= v."""
+        i = min(v, self._cap_max) + 1
+        s = 0
+        fen = self._fen
+        while i > 0:
+            s += fen[i]
+            i -= i & -i
+        return s
+
+    def _next_nonempty_ge(self, k: int) -> int:
+        """Smallest free value >= k held by any node, or -1 — O(log C)
+        binary descent over the Fenwick tree."""
+        if k < 0:
+            k = 0
+        if k > self._cap_max:
+            return -1
+        rem = (self._fen_prefix(k - 1) if k > 0 else 0) + 1
+        if rem > self._n_indexed:
+            return -1
+        pos = 0
+        bit = self._fen_log
+        fen, size = self._fen, self._fen_size
+        while bit:
+            npos = pos + bit
+            if npos <= size and fen[npos] < rem:
+                pos = npos
+                rem -= fen[pos]
+            bit >>= 1
+        return pos            # tree index pos+1 -> value pos
 
     def _reindex(self, node: Node):
         old = self._free_of.get(node.name)
@@ -94,36 +149,83 @@ class Cluster:
         new = node.n_slots - node.used
         if new == old:
             return
-        bucket = self._buckets.get(old)
-        if bucket is not None:
-            bucket.discard(node.name)
-            if not bucket:
-                del self._buckets[old]
-        self._buckets.setdefault(new, set()).add(node.name)
+        if new > self._cap_max:               # node outgrew the tree: rare
+            self._free_of[node.name] = new    # structural change — rebuild
+            self.rebuild_index()
+            return
+        ov, nv = self._clamp(old), self._clamp(new)
+        if ov != nv:
+            members = self._members.get(ov)
+            if members is not None:
+                members.discard(node.name)
+                if not members:
+                    del self._members[ov]
+            self._members.setdefault(nv, set()).add(node.name)
+            self._fen_add(ov, -1)
+            self._fen_add(nv, +1)
         self._free_of[node.name] = new
         self._free_total += new - old
 
+    # below this many distinct free values a plain dict scan beats the
+    # Fenwick descent (homogeneous fleets have <= slots+1 of them)
+    _HYBRID_SCAN = 16
+
     def iter_free_ge(self, k: int) -> Iterator[Tuple[int, Node]]:
         """Yield ``(index, node)`` for every node with ``free >= k``, in
-        arbitrary order.  O(matching nodes + distinct free values)."""
+        arbitrary order.  O(matching nodes + matching values · log C);
+        homogeneous fleets (few distinct free values) take a plain
+        dict-scan fast path instead of the tree descent."""
         by_name, idx = self._by_name, self._node_idx
-        for f in list(self._buckets):
-            if f >= k:
-                for name in self._buckets.get(f, ()):
-                    yield idx[name], by_name[name]
+        members = self._members
+        if k <= 0:
+            # stored values are clamped at 0: answer from the raw nodes
+            for i, n in enumerate(self.nodes):
+                if n.n_slots - n.used >= k:
+                    yield i, n
+            return
+        if len(members) <= self._HYBRID_SCAN:
+            for v in list(members):
+                if v >= k:
+                    for name in tuple(members.get(v, ())):
+                        yield idx[name], by_name[name]
+            return
+        v = self._next_nonempty_ge(k)
+        while v >= 0:
+            for name in tuple(members.get(v, ())):
+                yield idx[name], by_name[name]
+            v = self._next_nonempty_ge(v + 1)
 
     def free_ge_items(self, k: int) -> List[Tuple[int, Node]]:
         """``(index, node)`` list for nodes with ``free >= k`` (arbitrary
         order) — the materialized form of :meth:`iter_free_ge` for hot
-        loops."""
-        nidx, by_name = self._node_idx, self._by_name
-        return [(nidx[nm], by_name[nm])
-                for f, names in self._buckets.items() if f >= k
-                for nm in names]
+        loops (a single comprehension on the homogeneous fast path: no
+        generator frames or member-set copies per call)."""
+        members = self._members
+        if 0 < k and len(members) <= self._HYBRID_SCAN:
+            nidx, by_name = self._node_idx, self._by_name
+            return [(nidx[nm], by_name[nm])
+                    for v, names in members.items() if v >= k
+                    for nm in names]
+        return list(self.iter_free_ge(k))
 
     def max_free(self) -> int:
-        """Largest per-node free capacity — O(distinct free values)."""
-        return max(self._buckets, default=0)
+        """Largest per-node free capacity — O(log C) (dict max on the
+        homogeneous fast path)."""
+        if not self._n_indexed:
+            return 0
+        if len(self._members) <= self._HYBRID_SCAN:
+            return max(self._members)
+        pos = 0
+        rem = self._n_indexed
+        bit = self._fen_log
+        fen, size = self._fen, self._fen_size
+        while bit:
+            npos = pos + bit
+            if npos <= size and fen[npos] < rem:
+                pos = npos
+                rem -= fen[pos]
+            bit >>= 1
+        return pos
 
     def feasible_nodes(self, k: int,
                        staged: Optional[Dict[str, int]] = None) -> List[Node]:
@@ -131,10 +233,10 @@ class Cluster:
         candidate list a full scan of ``self.nodes`` would produce, without
         visiting infeasible nodes."""
         if staged:
-            out = [(i, n) for i, n in self.iter_free_ge(k)
+            out = [(i, n) for i, n in self.free_ge_items(k)
                    if n.n_slots - n.used - staged.get(n.name, 0) >= k]
         else:
-            out = list(self.iter_free_ge(k))
+            out = self.free_ge_items(k)
         out.sort(key=lambda t: t[0])
         return [n for _, n in out]
 
@@ -173,3 +275,17 @@ def fleet_cluster(n_pods: int = 2, hosts_per_pod: int = 64,
             nodes.append(Node(f"pod{p}-host{h}", n_slots=chips_per_host,
                               n_domains=1, pod=p))
     return Cluster(nodes, intra_bw=1.0, inter_bw=0.6, cross_pod_bw=0.05)
+
+
+def hetero_cluster(groups: Sequence[Tuple[int, int]] = ((48, 4), (12, 32),
+                                                        (4, 256))) -> Cluster:
+    """Heterogeneous fleet: ``groups`` is ``[(n_hosts, slots_per_host)]`` —
+    small accelerator hosts mixed with large-slot superpod nodes, the shape
+    the Fenwick capacity index exists for."""
+    nodes = []
+    i = 0
+    for count, slots in groups:
+        for _ in range(count):
+            nodes.append(Node(f"h{i}", n_slots=slots, n_domains=1))
+            i += 1
+    return Cluster(nodes)

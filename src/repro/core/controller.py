@@ -17,7 +17,7 @@ from repro.core.profiles import Workload
 
 @dataclasses.dataclass(eq=False)     # identity hash: workers live in the
 class WorkerSpec:                    # scheduler's per-node bound sets
-    job: str
+    job: str                      # job *name* (hostfile/pod labels)
     index: int
     n_tasks: int                  # slots in the hostfile entry
     cpu: float                    # resource request (R/N_t * nTasks)
@@ -26,6 +26,8 @@ class WorkerSpec:                    # scheduler's per-node bound sets
     node: str = ""                # assigned by the scheduler
     domains: Dict[int, int] = dataclasses.field(default_factory=dict)
     # ^ NUMA-socket pinning (tasks per domain), set at admission
+    uid: str = ""                 # per-submission gang identity; empty ->
+    #   schedulers fall back to ``job`` (the seed's aliasing semantics)
 
 
 def allocate_tasks(n_tasks: int, n_workers: int) -> List[int]:
@@ -37,11 +39,17 @@ def allocate_tasks(n_tasks: int, n_workers: int) -> List[int]:
 
 def make_workers(job: Workload, gran: Granularity,
                  cpu_per_task: float = 1.0,
-                 mem_per_task: float = 1.0) -> List[WorkerSpec]:
-    """Steps 1-3 of Algorithm 2: build worker pods with resources."""
+                 mem_per_task: float = 1.0,
+                 uid: str = "") -> List[WorkerSpec]:
+    """Steps 1-3 of Algorithm 2: build worker pods with resources.
+
+    ``uid`` threads the per-submission identity onto every worker of the
+    gang (the simulator passes ``JobRun.uid``); left empty, downstream
+    schedulers key gangs by job name."""
     counts = allocate_tasks(gran.n_tasks, gran.n_workers)
     return [WorkerSpec(job=job.name, index=i, n_tasks=c,
-                       cpu=cpu_per_task * c, memory=mem_per_task * c)
+                       cpu=cpu_per_task * c, memory=mem_per_task * c,
+                       uid=uid)
             for i, c in enumerate(counts) if c > 0]
 
 

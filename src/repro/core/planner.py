@@ -16,6 +16,11 @@ The planner's inputs are the job metadata (N_t fixed by the user — the
 the roofline analysis in this framework, see ``profiles.py``), and the
 cluster size (the paper reads it from Prometheus; we read it from the
 Cluster object).
+
+Granularity is a pure function of (profile, N_t, cluster size) — the
+per-submission ``Workload.uid`` rides through untouched and first matters
+downstream, when the controller stamps it onto the gang's ``WorkerSpec``s
+for Algorithm 4's group keys.
 """
 from __future__ import annotations
 

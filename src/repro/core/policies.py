@@ -1,0 +1,397 @@
+"""Infrastructure-layer placement policies (pluggable admission + binding).
+
+The simulator's admission path is a :class:`PlacementPolicy` object instead
+of scenario-flag branches, so scheduling behaviours compose and new policies
+(priorities, preemption, multi-queue) drop in without touching the event
+loop.  A policy owns two decisions:
+
+* **place** — bind one gang's workers to nodes (or refuse atomically);
+* **admit** — which queued gangs to attempt after an event, in what order.
+
+Three policies ship here:
+
+``default``
+    The Kubernetes default scheduler: per-pod uniform random choice among
+    feasible nodes, FIFO gang admission (optionally the seed's skip-ahead
+    ``backfill`` flag).  Two RNG regimes — see :meth:`DefaultPolicy.place`.
+
+``taskgroup``
+    Algorithms 3+4 (balanced groups, affinity/anti-affinity scoring) via
+    :mod:`repro.core.taskgroup`, same admission loop.
+
+``easy-backfill``
+    EASY backfill (Lifka '95; the standard Slurm/Moab discipline): the
+    blocked head of queue holds a *reservation* — a shadow start time and
+    the extra slots left at that time, projected from the running jobs'
+    predicted completions.  Jobs behind the head may start now only if they
+    cannot delay the reservation: estimated to finish before the shadow
+    time, or small enough to fit in the extra slots.  Unlike the seed's
+    ``backfill`` flag (which rescans and *attempts* the whole queue at every
+    event, and can starve a wide head forever), *placement attempts* after
+    each event are O(candidates): the queue is indexed by gang demand, so
+    only jobs that could fit the current free capacity are attempted at
+    all, the reservation is recomputed only when cluster capacity changed,
+    and queue upkeep is one batched sweep per event with admissions.
+
+Placement mechanism (default vs task-group) composes with EASY admission:
+``easy-backfill`` reads ``scenario.taskgroup`` to pick its binder.
+"""
+from __future__ import annotations
+
+import bisect
+import heapq
+import random
+from typing import Dict, List, Optional
+
+from repro.core import taskgroup as TG
+from repro.core.controller import make_workers
+
+
+def make_policy(sim) -> "PlacementPolicy":
+    """Resolve a simulator's scenario to a policy instance.
+
+    ``scenario.placement`` names the policy explicitly; left ``None``, the
+    seed flags select it (``taskgroup`` -> task-group binding, with the
+    ``backfill`` flag handled inside the FIFO admission loop)."""
+    name = sim.sc.placement
+    if name is None:
+        name = "taskgroup" if sim.sc.taskgroup else "default"
+    try:
+        return POLICIES[name](sim)
+    except KeyError:
+        raise ValueError(f"unknown placement policy {name!r}; "
+                         f"known: {sorted(POLICIES)}") from None
+
+
+class PlacementPolicy:
+    """Admission + binding strategy for one simulator instance.
+
+    Subclasses override :meth:`place` (bind one gang, atomically) and may
+    override :meth:`admit` (which queued gangs to try).  The base ``admit``
+    is the seed's loop: FIFO head-only, or whole-queue skip-ahead when the
+    scenario's ``backfill`` flag is set.
+    """
+
+    name = "abstract"
+
+    def __init__(self, sim):
+        self.sim = sim
+
+    # -- queue membership hooks (EASY keeps a demand index; base: no-ops) --
+    def on_enqueue(self, jr):
+        pass
+
+    def on_dequeue(self, jr):
+        pass
+
+    # -- binding ----------------------------------------------------------
+    def place(self, jr, use_index: bool = True):
+        raise NotImplementedError
+
+    def pre_reject(self, jr, use_index: bool) -> bool:
+        """O(1) necessary-condition test: True = gang cannot possibly fit
+        (skip the placement attempt without touching any node)."""
+        return False
+
+    def _start(self, jr, placed, dirty_nodes: Optional[set]):
+        """Shared start bookkeeping for every admission path: record the
+        binding and hand the gang to the simulator.  Queue removal stays
+        with the caller (head paths delete by index; the EASY backfill
+        pass batches removals into one sweep)."""
+        jr.workers = placed
+        if jr.start_t is None:
+            jr.start_t = self.sim.now
+        self.on_dequeue(jr)
+        self.sim._on_start(jr, dirty_nodes)
+
+    # -- admission --------------------------------------------------------
+    def admit(self, dirty_nodes: Optional[set], use_index: bool = True):
+        """FIFO gang admission; with the scenario ``backfill`` flag, jobs
+        behind a blocked head may start if they fit *now* (the seed's
+        unrestricted skip-ahead — no reservation, wide heads can starve)."""
+        sim = self.sim
+        admitted = True
+        while admitted and sim.queue:
+            admitted = False
+            limit = len(sim.queue) if sim.sc.backfill else 1
+            for i in range(limit):
+                jr = sim.queue[i]
+                if self.pre_reject(jr, use_index):
+                    continue
+                placed = self.place(jr, use_index)
+                if placed is not None:
+                    del sim.queue[i]
+                    self._start(jr, placed, dirty_nodes)
+                    admitted = True
+                    break
+
+
+class DefaultPolicy(PlacementPolicy):
+    """K8s default scheduler: per-pod placement.  The paper observes that
+    "by default the scheduler randomly chooses the nodes to deploy the pods
+    within a same job" — uniform choice among feasible nodes.
+
+    Two RNG regimes, selected by the scenario's ``job_ids`` mode:
+
+    * ``name`` (seed-compatible): draws come from the simulator's shared
+      stream, one per worker, *including failed attempts* — so a blocked
+      gang perturbs every later placement, and an O(1) pre-reject would
+      change the stream (it is therefore disabled).
+    * ``uid``: draws are *keyed* — ``hash(base seed, submission, worker)``
+      seeds a throwaway generator, so an attempt consumes nothing shared.
+      Failed (or skipped) attempts leave no trace, which is what makes the
+      O(1) gang pre-reject stream-stable, and makes placement a pure
+      function of (cluster state, key) — identical across event loops.
+    """
+
+    name = "default"
+
+    def pre_reject(self, jr, use_index: bool) -> bool:
+        if not (use_index and self.sim.sc.job_ids == "uid"):
+            return False
+        return (jr.gran.n_tasks > self.sim.cluster.free_slots or
+                jr.gran.tasks_per_worker > self.sim.cluster.max_free())
+
+    def place(self, jr, use_index: bool = True):
+        sim = self.sim
+        keyed = sim.sc.job_ids == "uid"
+        workers = make_workers(jr.job, jr.gran, uid=jr.uid)
+        staged: Dict[str, int] = {}
+        for wi, w in enumerate(workers):
+            if use_index:
+                feas = sim.cluster.feasible_nodes(w.n_tasks, staged)
+            else:
+                feas = [n for n in sim.cluster.nodes
+                        if n.free - staged.get(n.name, 0) >= w.n_tasks]
+            if not feas:
+                return None
+            if keyed:
+                key = (sim._base_seed * 1_000_003 + jr._seq) \
+                    * 1_000_003 + wi
+                best = feas[random.Random(key).randrange(len(feas))]
+            else:
+                best = sim.rng.choice(feas)
+            w.node = best.name
+            staged[best.name] = staged.get(best.name, 0) + w.n_tasks
+        for w in workers:
+            sim.cluster.node(w.node).used += w.n_tasks
+            sim.bound.add(w)
+        return workers
+
+
+class TaskGroupPolicy(PlacementPolicy):
+    """Algorithms 3+4 binding (balanced groups, affinity scoring)."""
+
+    name = "taskgroup"
+
+    def pre_reject(self, jr, use_index: bool) -> bool:
+        if not use_index:
+            return False
+        return (jr.gran.n_tasks > self.sim.cluster.free_slots or
+                jr.gran.tasks_per_worker > self.sim.cluster.max_free())
+
+    def place(self, jr, use_index: bool = True):
+        sim = self.sim
+        if not use_index:            # legacy: rebuild the gang every attempt
+            workers = make_workers(jr.job, jr.gran, uid=jr.uid)
+            return TG.schedule_job(sim.cluster, workers, jr.gran.n_groups,
+                                   bound=sim.bound, use_index=False)
+        if jr._plan is None:         # plan is deterministic — cache it
+            workers = make_workers(jr.job, jr.gran, uid=jr.uid)
+            jr._plan = (workers, TG.make_plan(workers, jr.gran.n_groups))
+        workers, plan = jr._plan
+        return TG.schedule_job(sim.cluster, workers, jr.gran.n_groups,
+                               bound=sim.bound, use_index=True, plan=plan)
+
+
+class EasyBackfillPolicy(PlacementPolicy):
+    """EASY backfill: head-of-queue reservation + windowed skip-ahead.
+
+    The binder comes from ``scenario.taskgroup``.  Queued gangs are indexed
+    by total demand (a bisect-sorted list with lazy deletion), so a blocked
+    event attempts only the gangs whose demand fits the current free
+    capacity instead of rescanning the whole queue.  The head's reservation
+    ``(shadow start, extra slots)`` is projected from running jobs' current
+    predicted finishes — both the aggregate free count *and* a node able to
+    host the head's widest worker must materialize — and is cached against
+    the cluster's capacity version, so it is recomputed at most once per
+    capacity-changing event.
+
+    Estimated runtimes for the backfill window use ``remaining`` work at
+    full speed — optimistic under contention, exactly like the user-supplied
+    estimates classic EASY schedulers trust.  A too-short estimate can delay
+    the head (bounded by the backfill job's true runtime); it cannot be
+    *overtaken*: slack-window backfills are capped by the aggregate extra
+    slots, and on the *shadow node* — the node whose projected drain is
+    what lets the head's widest worker fit — they may consume only the
+    projected surplus beyond that worker's demand: the protected capacity
+    is masked off while their placement runs, so the binder cannot squat
+    on what the head is waiting for.  (Per-node reservations beyond that
+    single node are not modelled; the head may still slip by one backfill
+    runtime on multi-node gangs, as in classic slot-count EASY.)
+    """
+
+    name = "easy-backfill"
+
+    def __init__(self, sim):
+        super().__init__(sim)
+        self._binder = (TaskGroupPolicy(sim) if sim.sc.taskgroup
+                        else DefaultPolicy(sim))
+        self._demands: List[tuple] = []   # sorted (demand, seq, jr)
+        self._gone: set = set()           # lazy-deleted JobRuns
+        self._resv: Optional[tuple] = None   # (head, cap_ver, shadow, extra)
+
+    # binding is delegated wholesale
+    def place(self, jr, use_index: bool = True):
+        return self._binder.place(jr, use_index)
+
+    def pre_reject(self, jr, use_index: bool) -> bool:
+        return self._binder.pre_reject(jr, use_index)
+
+    def on_enqueue(self, jr):
+        # failure requeues re-enqueue an already-seen JobRun: clear its
+        # lazy-deletion mark and never double-insert its entry
+        self._gone.discard(jr)
+        entry = (jr.gran.n_tasks, jr._seq, jr)
+        i = bisect.bisect_left(self._demands, entry[:2])
+        if i < len(self._demands) and self._demands[i] == entry:
+            return
+        self._demands.insert(i, entry)
+
+    def on_dequeue(self, jr):
+        self._gone.add(jr)
+        if len(self._gone) * 2 > len(self._demands):   # amortized compact
+            self._demands = [e for e in self._demands
+                             if e[2] not in self._gone]
+            self._gone.clear()
+
+    def _reservation(self, head):
+        """Shadow start time + extra slots + (shadow node, its slack) for
+        the blocked head, from the running jobs' predicted completions
+        (O(k log R) for the k finishes needed) — cached until cluster
+        capacity next changes.  The shadow node is the node whose
+        projected drain first reaches the head's widest-worker demand;
+        its slack is the projected surplus beyond that demand, the only
+        part of the node slack-window backfills may consume."""
+        sim = self.sim
+        if self._resv is not None and self._resv[0] is head \
+                and self._resv[1] == sim._cap_ver:
+            return self._resv[2:]
+        cluster = sim.cluster
+        need_total = head.gran.n_tasks
+        need_worker = head.gran.tasks_per_worker
+        free_total = cluster.free_slots
+        cur_max = cluster.max_free()
+        shadow = sim.now
+        # the per-node component is tracked only when it actually binds:
+        # no node can host the widest worker *now*, so the head waits on
+        # one specific node's drain.  When any node already could (the
+        # aggregate count is what blocks), there is nothing node-shaped
+        # to protect and backfills stay unrestricted across nodes.
+        track_node = cur_max < need_worker
+        shadow_node = None
+        ev = [(jr._synced_t + jr.remaining / jr.speed, jr._seq, jr)
+              for jr in sim.running]
+        heapq.heapify(ev)
+        node_free: Dict[str, int] = {}
+        while ev and (free_total < need_total or cur_max < need_worker):
+            t, _, jr = heapq.heappop(ev)
+            shadow = max(shadow, t)
+            for node, tasks in jr.nodes_used.items():
+                f = node_free.get(node)
+                if f is None:
+                    f = cluster.node(node).free
+                f += tasks
+                node_free[node] = f
+                if f > cur_max:
+                    cur_max = f
+                if track_node and shadow_node is None \
+                        and f >= need_worker:
+                    shadow_node = node
+            free_total += jr.gran.n_tasks
+        if free_total < need_total or cur_max < need_worker:
+            # head can never start (even with everything drained): no
+            # reservation to protect — backfill freely; the event loop's
+            # deadlock check will report it unschedulable
+            shadow = float("inf")
+            shadow_node = None
+        extra = free_total - need_total
+        shadow_slack = 0
+        if shadow_node is not None:
+            projected = node_free.get(shadow_node)
+            if projected is None:
+                projected = cluster.node(shadow_node).free
+            shadow_slack = projected - need_worker
+        self._resv = (head, sim._cap_ver, shadow, extra, shadow_node,
+                      shadow_slack)
+        return shadow, extra, shadow_node, shadow_slack
+
+    def admit(self, dirty_nodes: Optional[set], use_index: bool = True):
+        sim = self.sim
+        while sim.queue:
+            head = sim.queue[0]
+            placed = None if self.pre_reject(head, use_index) \
+                else self.place(head, use_index)
+            if placed is not None:
+                del sim.queue[0]
+                self._start(head, placed, dirty_nodes)
+                continue                      # new head gets a FIFO try
+            # head blocked: reserve, then one windowed backfill pass over
+            # candidates only (gangs whose demand fits current free slots)
+            shadow, extra, shadow_node, shadow_slack = \
+                self._reservation(head)
+            free = sim.cluster.free_slots
+            hi = bisect.bisect_right(self._demands, (free, float("inf")))
+            cands = sorted(
+                (e[1], e[2]) for e in self._demands[:hi]
+                if e[2] not in self._gone and e[2] is not head)
+            started = set()
+            for _, jr in cands:
+                if jr.gran.n_tasks > sim.cluster.free_slots:
+                    continue                  # earlier backfill shrank free
+                drains_in_time = sim.now + jr.remaining <= shadow
+                fits_window = (drains_in_time
+                               or jr.gran.n_tasks <= extra)
+                if not fits_window or self.pre_reject(jr, use_index):
+                    continue
+                if drains_in_time or shadow_node is None:
+                    placed = self.place(jr, use_index)
+                else:
+                    # mask the shadow node's protected capacity (all but
+                    # the projected surplus) while this slack-window
+                    # placement runs: the binder can then use at most
+                    # ``shadow_slack`` of the node the head waits for,
+                    # and hopeless gangs fail fast instead of being
+                    # placed and rolled back at every event.  The mask
+                    # rides the documented auto-reindex contract of
+                    # ``Node.used``; binders must not cache cluster state
+                    # across placements (none do — threading a reserved-
+                    # capacity overlay through place() is the cleaner
+                    # future shape, see ROADMAP)
+                    node = sim.cluster.node(shadow_node)
+                    take = max(0, node.n_slots - node.used - shadow_slack)
+                    node.used += take
+                    try:
+                        placed = self.place(jr, use_index)
+                    finally:
+                        node.used -= take
+                    if placed is not None:
+                        shadow_slack -= sum(w.n_tasks for w in placed
+                                            if w.node == shadow_node)
+                if placed is None:
+                    continue
+                started.add(jr)
+                self._start(jr, placed, dirty_nodes)
+                if sim.now + jr.remaining > shadow:
+                    extra -= jr.gran.n_tasks  # consumed reservation slack
+            if started:                       # one O(Q) sweep per event, not
+                sim.queue[:] = [j for j in sim.queue   # one per placement
+                                if j not in started]
+            return
+
+
+POLICIES = {
+    "default": DefaultPolicy,
+    "taskgroup": TaskGroupPolicy,
+    "easy-backfill": EasyBackfillPolicy,
+}

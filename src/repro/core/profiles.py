@@ -41,12 +41,21 @@ def classify_roofline(compute_s: float, hbm_s: float,
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
-    """A schedulable job type for the cluster simulator."""
+    """A schedulable job type for the cluster simulator.
+
+    ``uid`` is the optional *per-submission* identity (the K8s job UID):
+    two submissions of the same job type share ``name`` but never ``uid``.
+    Simulators running with ``job_ids="uid"`` key gang membership on it
+    (generating one if unset), so concurrent same-name jobs never alias in
+    Algorithm 4 scoring; the seed-compatible ``job_ids="name"`` mode keys
+    on ``name`` and ignores it.
+    """
     name: str
     profile: Profile
     n_tasks: int            # N_t (MPI processes / model shards)
     base_runtime: float     # seconds, best-case standalone fine-grained run
     arch: Optional[str] = None   # assigned architecture id, if arch-derived
+    uid: Optional[str] = None    # per-submission identity (K8s job UID)
 
 
 # --- the paper's five benchmarks (HPCC + MiniFE), 16 MPI processes each ----

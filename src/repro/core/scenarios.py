@@ -36,6 +36,21 @@ SCENARIOS: Dict[str, Scenario] = {
                          taskgroup=False),
     "Volcano": Scenario("Volcano", affinity=True, policy=None,
                         taskgroup=False, force_split=True),
+    # ---- beyond-paper fleet scenarios (pluggable policy layer) ----------
+    # EASY backfill: head-of-queue reservation + windowed skip-ahead,
+    # composed over the default or task-group binder
+    "CM_G_EASY": Scenario("CM_G_EASY", affinity=True, policy="granularity",
+                          taskgroup=False, placement="easy-backfill"),
+    "CM_G_TG_EASY": Scenario("CM_G_TG_EASY", affinity=True,
+                             policy="granularity", taskgroup=True,
+                             placement="easy-backfill"),
+    # fleet mode: per-submission JobIds (no same-name aliasing in
+    # Algorithm 4) + keyed RNG draws (O(1) gang pre-rejects everywhere)
+    "FLEET": Scenario("FLEET", affinity=True, policy="granularity",
+                      taskgroup=True, job_ids="uid"),
+    "FLEET_EASY": Scenario("FLEET_EASY", affinity=True,
+                           policy="granularity", taskgroup=True,
+                           placement="easy-backfill", job_ids="uid"),
 }
 
 
@@ -62,6 +77,7 @@ FLEET_WORKLOADS: Tuple[Workload, ...] = (
 def poisson_heavy_traffic(n_jobs: int, cluster_slots: int, seed: int = 0,
                           utilization: float = 1.25,
                           workloads: Sequence[Workload] = FLEET_WORKLOADS,
+                          unique_names: bool = True,
                           ) -> List[Tuple[Workload, float]]:
     """Poisson arrival process sized to keep the cluster saturated.
 
@@ -70,6 +86,13 @@ def poisson_heavy_traffic(n_jobs: int, cluster_slots: int, seed: int = 0,
     grows during the arrival window and drains afterwards, the
     heavy-traffic regime where per-event scheduler cost dominates.
     Returns ``[(Workload, submit_time)]`` ready for ``Simulator.run``.
+
+    Every submission carries a per-arrival ``uid`` (its K8s job UID).  With
+    ``unique_names`` (default) the *name* is uniquified too, so Algorithm 4
+    never aliases concurrent jobs of one type even in the seed-compatible
+    ``job_ids="name"`` mode; ``unique_names=False`` keeps the raw type
+    names — the fleet-realistic shape where only ``job_ids="uid"`` keeps
+    concurrent same-type jobs apart.
     """
     import dataclasses
 
@@ -82,7 +105,7 @@ def poisson_heavy_traffic(n_jobs: int, cluster_slots: int, seed: int = 0,
     for i in range(n_jobs):
         t += rng.expovariate(rate)
         w = workloads[rng.randrange(len(workloads))]
-        # unique name per arrival: each submission is its own K8s job (own
-        # UID), so Algorithm 4 never aliases concurrent jobs of one type
-        subs.append((dataclasses.replace(w, name=f"{w.name}.{i}"), t))
+        name = f"{w.name}.{i}" if unique_names else w.name
+        subs.append((dataclasses.replace(w, name=name,
+                                         uid=f"{w.name}.{i}"), t))
     return subs

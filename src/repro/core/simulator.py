@@ -47,8 +47,9 @@ import heapq
 import random
 from typing import Dict, List, Optional
 
+from repro.core import policies as POL
 from repro.core.cluster import Cluster
-from repro.core.controller import WorkerSpec, make_workers
+from repro.core.controller import WorkerSpec
 from repro.core.planner import Granularity, select_granularity
 from repro.core.profiles import Profile, Workload
 from repro.core import taskgroup as TG
@@ -94,6 +95,14 @@ class Scenario:
     backfill: bool = False                # skip-ahead admission (beyond-paper)
     ckpt_interval: float = 120.0          # work-seconds between checkpoints
     perf: PerfParams = PerfParams()
+    # placement-policy name ("default" | "taskgroup" | "easy-backfill");
+    # None derives it from the seed flags above (see policies.make_policy)
+    placement: Optional[str] = None
+    # gang-identity mode: "name" = the seed's (job name, group) keys and
+    # shared-stream RNG draws (concurrent same-name jobs alias — kept as
+    # the calibrated-paper-scenario default); "uid" = per-submission JobIds
+    # end-to-end + keyed RNG draws + O(1) gang pre-rejects everywhere
+    job_ids: str = "name"
 
 
 @dataclasses.dataclass(eq=False)         # identity hash: JobRuns live in the
@@ -101,6 +110,7 @@ class JobRun:                            # per-node running-jobs index
     job: Workload
     gran: Granularity
     submit_t: float
+    uid: str = ""                        # per-submission gang identity
     workers: List[WorkerSpec] = dataclasses.field(default_factory=list)
     start_t: Optional[float] = None
     finish_t: Optional[float] = None
@@ -169,12 +179,15 @@ class Simulator:
         self.now = 0.0
         self.n_events = 0
         self._seq = 0
+        self._base_seed = seed
+        self._cap_ver = 0                      # bumped on any capacity change
         self._node_jobs: Dict[str, set] = {}   # node -> running JobRuns
         self._mem_load_live: Dict[str, float] = {}
         self._finish_heap: List[tuple] = []
         # monotone floor over every speed ever assigned (speeds are <= 1);
         # bounds the completion-scan window in the event loop
         self._speed_floor = 1.0
+        self.policy = POL.make_policy(self)    # infrastructure-layer policy
 
     # ---------------- submission -----------------------------------------
     def submit(self, job: Workload, t: float):
@@ -188,77 +201,28 @@ class Simulator:
                     remaining=job.base_runtime)
         jr._seq = self._seq
         self._seq += 1
+        # gang identity: "name" mode reproduces the seed's (job name, group)
+        # keys (concurrent same-name jobs alias); "uid" mode gives every
+        # submission its own JobId (the Workload's K8s-style uid, or a
+        # generated one), threaded through planner -> workers -> Algorithm 4
+        if self.sc.job_ids == "uid":
+            jr.uid = job.uid or f"{job.name}#{jr._seq}"
+        else:
+            jr.uid = job.name
         self.queue.append(jr)
+        self.policy.on_enqueue(jr)
 
-    # ---------------- placement ------------------------------------------
-    def _place_default(self, jr: JobRun,
-                       use_index: bool = True) -> Optional[List[WorkerSpec]]:
-        """K8s default scheduler: per-pod placement.  The paper observes
-        that "by default the scheduler randomly chooses the nodes to deploy
-        the pods within a same job" — uniform choice among feasible nodes.
-        The indexed path builds the identical candidate list (same nodes,
-        same cluster order — so the same RNG stream) from the free-capacity
-        buckets instead of scanning every node."""
-        workers = make_workers(jr.job, jr.gran)
-        staged: Dict[str, int] = {}
-        for w in workers:
-            if use_index:
-                feas = self.cluster.feasible_nodes(w.n_tasks, staged)
-            else:
-                feas = [n for n in self.cluster.nodes
-                        if n.free - staged.get(n.name, 0) >= w.n_tasks]
-            if not feas:
-                return None
-            best = self.rng.choice(feas)
-            w.node = best.name
-            staged[best.name] = staged.get(best.name, 0) + w.n_tasks
-        for w in workers:
-            self.cluster.node(w.node).used += w.n_tasks
-            self.bound.add(w)
-        return workers
-
-    def _place_taskgroup(self, jr: JobRun,
-                         use_index: bool = True) -> Optional[List[WorkerSpec]]:
-        if not use_index:            # legacy: rebuild the gang every attempt
-            workers = make_workers(jr.job, jr.gran)
-            return TG.schedule_job(self.cluster, workers, jr.gran.n_groups,
-                                   bound=self.bound, use_index=False)
-        if jr._plan is None:         # plan is deterministic — cache it
-            workers = make_workers(jr.job, jr.gran)
-            jr._plan = (workers, TG.make_plan(workers, jr.gran.n_groups))
-        workers, plan = jr._plan
-        return TG.schedule_job(self.cluster, workers, jr.gran.n_groups,
-                               bound=self.bound, use_index=True, plan=plan)
-
+    # ---------------- admission (policy dispatch) --------------------------
     def _try_admit(self, dirty_nodes: Optional[set] = None,
                    use_index: bool = True):
-        """FIFO gang admission; with ``backfill`` on, jobs behind a blocked
-        head may start if they fit *now* (EASY-style skip-ahead — a
-        beyond-paper extension benchmarked in benchmarks/backfill.py)."""
-        admitted = True
-        while admitted and self.queue:
-            admitted = False
-            limit = len(self.queue) if self.sc.backfill else 1
-            for i in range(limit):
-                jr = self.queue[i]
-                if use_index and self.sc.taskgroup and \
-                        (jr.gran.n_tasks > self.cluster.free_slots or
-                         jr.gran.tasks_per_worker > self.cluster.max_free()):
-                    continue             # gang cannot fit: O(1) reject
-                placed = (self._place_taskgroup(jr, use_index)
-                          if self.sc.taskgroup
-                          else self._place_default(jr, use_index))
-                if placed is not None:
-                    jr.workers = placed
-                    if jr.start_t is None:
-                        jr.start_t = self.now
-                    del self.queue[i]
-                    self._on_start(jr, dirty_nodes)
-                    admitted = True
-                    break
+        """Admission is delegated to the scenario's placement policy (see
+        ``repro.core.policies``): FIFO/skip-ahead with default or task-group
+        binding, or EASY backfill with a head-of-queue reservation."""
+        self.policy.admit(dirty_nodes, use_index)
 
     # ---------------- incremental cluster-state bookkeeping ----------------
     def _on_start(self, jr: JobRun, dirty_nodes: Optional[set]):
+        self._cap_ver += 1
         self.running[jr] = None
         self._pin_domains(jr)
         jr._nodes = None
@@ -281,6 +245,7 @@ class Simulator:
     def _on_stop(self, jr: JobRun, dirty_nodes: Optional[set]):
         """Release a finishing/killed job's placement (slots, bound workers,
         node->jobs index, memory load) — the inverse of ``_on_start``."""
+        self._cap_ver += 1
         del self.running[jr]
         self._unpin_domains(jr)
         nodes = jr.nodes_used
@@ -574,6 +539,7 @@ class Simulator:
         node = self.cluster.node(node_name)
         if down_for < 0:                        # recovery
             node.n_slots = -int(down_for)
+            self._cap_ver += 1
             return
         if node.n_slots == 0:
             # the node is already down: nothing to kill, and its pending
@@ -592,11 +558,13 @@ class Simulator:
             jr.remaining = jr.job.base_runtime - saved
             jr.workers = []
             self.queue.insert(0, jr)            # resumes with priority
+            self.policy.on_enqueue(jr)
         self.preempted = getattr(self, "preempted", 0) + len(victims)
         # take the node down; schedule its recovery as a pseudo-failure
         heapq.heappush(fails, (self.now + down_for, node_name,
                                -float(node.n_slots)))
         node.n_slots = 0
+        self._cap_ver += 1
 
     # ---------------- metrics ---------------------------------------------
     @staticmethod

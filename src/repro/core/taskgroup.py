@@ -16,9 +16,14 @@ Algorithm 4 scoring for (worker, node):
 
 Fleet-scale implementation notes: bound workers are tracked in a
 :class:`BoundIndex` — per-node identity sets plus per-node
-``(job, group) -> count`` maps — so a scoring decision reads O(1) state per
+``(gang, group) -> count`` maps — so a scoring decision reads O(1) state per
 candidate node instead of rescanning bound lists, and candidate nodes come
-from the cluster's free-capacity bucket index instead of an O(N) scan.
+from the cluster's Fenwick free-capacity index instead of an O(N) scan.
+
+Gang identity (:func:`gang_key`) is the worker's per-submission ``uid`` when
+set, else the job *name* — the seed's ``(job name, group)`` key, under which
+concurrent same-name jobs alias into one pseudo-gang.  The simulator's
+``job_ids`` mode decides which identity the workers carry.
 """
 from __future__ import annotations
 
@@ -28,6 +33,12 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.cluster import Cluster, Node
 from repro.core.controller import WorkerSpec
+
+
+def gang_key(w: WorkerSpec) -> tuple:
+    """Scoring identity of a bound worker: ``(submission uid or job name,
+    group index)``."""
+    return (w.uid or w.job, w.group)
 
 
 @dataclasses.dataclass
@@ -45,7 +56,7 @@ class BoundIndex:
     task-group scorer.
 
     ``workers[node]`` is a set (O(1) add/remove — the seed used O(W) list
-    membership); ``counts[node]`` is the ``(job, group) -> count`` map that
+    membership); ``counts[node]`` is the ``gang_key -> count`` map that
     Algorithm 4 reads, maintained incrementally instead of rebuilt per
     scheduling decision.
     """
@@ -55,12 +66,12 @@ class BoundIndex:
     def __init__(self):
         self.workers: Dict[str, set] = {}
         self.counts: Dict[str, Dict] = {}
-        self.by_key: Dict[tuple, set] = {}   # (job, group) -> {node names}
+        self.by_key: Dict[tuple, set] = {}   # gang_key -> {node names}
 
     def add(self, w: WorkerSpec):
         self.workers.setdefault(w.node, set()).add(w)
         c = self.counts.setdefault(w.node, {})
-        key = (w.job, w.group)
+        key = gang_key(w)
         c[key] = c.get(key, 0) + 1
         self.by_key.setdefault(key, set()).add(w.node)
 
@@ -70,7 +81,7 @@ class BoundIndex:
             ws.discard(w)
         c = self.counts.get(w.node)
         if c is not None:
-            key = (w.job, w.group)
+            key = gang_key(w)
             left = c.get(key, 0) - 1
             if left > 0:
                 c[key] = left
@@ -134,16 +145,16 @@ def node_score(worker: WorkerSpec, node: Node, groups: Sequence[Group],
     :class:`BoundIndex`."""
     group = groups[worker.group]
     on_node = bound.get(node.name, ())
+    key_w = gang_key(worker)
     score = 0.0
     # step 1: same-group workers already bound to this node
     for w in on_node:
-        if w.job == worker.job and w.group == worker.group:
+        if gang_key(w) == key_w:
             score += 1
     # step 2: remaining tasks in the group (base score)
     score += len(group.workers)
     # step 3: avoid other groups on the node
-    others = {(w.job, w.group) for w in on_node
-              if not (w.job == worker.job and w.group == worker.group)}
+    others = {gang_key(w) for w in on_node if gang_key(w) != key_w}
     score -= len(others)
     return score
 
@@ -153,7 +164,8 @@ def _counts_from_lists(bound: Dict[str, List[WorkerSpec]]) -> Dict[str, Dict]:
     for node, ws in bound.items():
         c = counts.setdefault(node, {})
         for w in ws:
-            c[(w.job, w.group)] = c.get((w.job, w.group), 0) + 1
+            key = gang_key(w)
+            c[key] = c.get(key, 0) + 1
     return counts
 
 
@@ -227,7 +239,7 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
 
     for w in ordered:
         gsize = len(groups[w.group].workers)
-        key_w = (w.job, w.group)
+        key_w = gang_key(w)
         need = w.n_tasks
         best, best_rank = None, None
         if indexed and is_bindex:

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import SHAPES, get_config, list_configs, \
     shape_skip_reason
 from repro.core.meshplan import plan_job
@@ -179,7 +180,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         # alias inputs — the steady-state HBM picture, not double-buffered
         donate = (0,) if shape.kind == "train" else \
             ((2,) if shape.kind == "decode" else ())
-        with jax.set_mesh(mesh):
+        with compat.mesh_context(mesh):
             lowered = jax.jit(fn, in_shardings=shards,
                               donate_argnums=donate).lower(*args)
             t_low = time.time() - t0

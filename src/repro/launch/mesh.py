@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import ArchConfig, ShapeSpec
 from repro.models import model as M
 from repro.models.sharding import Rules, spec as rules_spec
@@ -16,9 +17,7 @@ from repro.models.sharding import Rules, spec as rules_spec
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def effective_rules(rules: Rules, mesh) -> Rules:

@@ -56,6 +56,29 @@ def _bytes_of(type_str: str) -> int:
     return total
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an HLO operand list at top-level commas only.  Newer XLA
+    versions print operand types inline (``f32[16,16]{1,0} %arg``), so a
+    naive ``split(",")`` would cut shapes and layouts apart — losing the
+    contracting-dim resolution (and with it ~all dot FLOPs)."""
+    out: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
 def _dims_of(type_str: str) -> List[int]:
     m = _SHAPE_RE.search(type_str)
     if not m or not m.group(2):
@@ -206,7 +229,7 @@ class HloModule:
         dm = re.search(r"\bdot\((.*?)\)", rhs)
         if dm and " dot(" in rhs:
             out_dims = _dims_of(rhs.split(" dot(")[0])
-            operands = dm.group(1).split(",")
+            operands = _split_operands(dm.group(1))
             lhs_dims = self._operand_dims(comp, operands[0]) \
                 if operands else []
             cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)

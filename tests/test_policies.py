@@ -1,0 +1,304 @@
+"""Layered scheduling stack: pluggable policies, EASY backfill reservations,
+per-submission JobIds, Fenwick capacity index."""
+import dataclasses as dc
+import random
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.cluster import Cluster, Node, hetero_cluster, paper_cluster
+from repro.core.controller import make_workers
+from repro.core.planner import select_granularity
+from repro.core.policies import (DefaultPolicy, EasyBackfillPolicy,
+                                 TaskGroupPolicy, make_policy)
+from repro.core.profiles import Profile, Workload
+from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
+from repro.core.simulator import Simulator
+from repro.core import taskgroup as TG
+
+
+def small_fleet(n_hosts=16, slots=4):
+    return Cluster([Node(f"h{i}", n_slots=slots, n_domains=1)
+                    for i in range(n_hosts)])
+
+
+# ----------------------------------------------------------------------
+# Fenwick free-capacity index vs a naive scan (heterogeneous fleets)
+# ----------------------------------------------------------------------
+@given(seed=st.integers(0, 10_000), n_nodes=st.integers(1, 60))
+@settings(max_examples=60, deadline=None)
+def test_fenwick_index_matches_naive_scan(seed, n_nodes):
+    """Heterogeneous slot counts with up to 60 nodes of near-unique free
+    values — beyond the ``_HYBRID_SCAN`` dict-scan threshold, so the
+    Fenwick binary-descent paths (``_next_nonempty_ge`` / ``max_free``)
+    are exercised, not just the homogeneous fast path."""
+    rng = random.Random(seed)
+    slots_menu = [0, 1, 3, 4, 32, 100, 513]      # mixed small + large nodes
+    nodes = [Node(f"n{i}", n_slots=rng.choice(slots_menu) + rng.randrange(8))
+             for i in range(n_nodes)]
+    c = Cluster(nodes)
+    for _ in range(25):
+        nd = rng.choice(c.nodes)
+        if rng.random() < 0.5:
+            nd.used = rng.randrange(0, nd.n_slots + 1) if nd.n_slots else 0
+        else:                                    # failures grow/shrink nodes
+            nd.n_slots = rng.choice(slots_menu + [2000]) + rng.randrange(8)
+            nd.used = min(nd.used, nd.n_slots)
+        k = rng.randrange(0, 600)
+        naive = sorted((i, n.name) for i, n in enumerate(c.nodes)
+                       if n.free >= k)
+        got = sorted((i, n.name) for i, n in c.iter_free_ge(k))
+        assert got == naive
+        assert sorted(got) == sorted((i, n.name)
+                                     for i, n in c.free_ge_items(k))
+        assert c.max_free() == max(n.free for n in c.nodes)
+        assert c.free_slots == sum(n.free for n in c.nodes)
+
+
+def test_fenwick_descent_beyond_hybrid_threshold():
+    """>16 distinct free values forces the tree descent deterministically."""
+    c = Cluster([Node(f"n{i}", n_slots=i + 1) for i in range(40)])
+    assert len(c._members) > c._HYBRID_SCAN
+    for k in (0, 1, 7, 16, 17, 25, 39, 40, 41):
+        naive = sorted((i, n.name) for i, n in enumerate(c.nodes)
+                       if n.free >= k)
+        assert sorted((i, n.name) for i, n in c.iter_free_ge(k)) == naive
+    assert c.max_free() == 40
+    c.nodes[39].used = 40                        # retire the biggest
+    c.nodes[38].used = 10
+    assert c.max_free() == 38
+
+
+def test_hetero_cluster_large_worker_placement():
+    """A 256-task coarse worker fits only the superpod nodes; the index
+    must surface exactly those."""
+    c = hetero_cluster(((8, 4), (2, 256)))
+    names = {n.name for _, n in c.iter_free_ge(256)}
+    assert names == {n.name for n in c.nodes if n.n_slots == 256}
+    assert c.max_free() == 256
+
+
+# ----------------------------------------------------------------------
+# policy resolution + per-submission JobIds
+# ----------------------------------------------------------------------
+def test_policy_resolution_from_scenario_flags():
+    assert isinstance(Simulator(small_fleet(), SCENARIOS["CM_G"]).policy,
+                      DefaultPolicy)
+    assert isinstance(Simulator(small_fleet(), SCENARIOS["CM_G_TG"]).policy,
+                      TaskGroupPolicy)
+    for scn in ("CM_G_EASY", "CM_G_TG_EASY", "FLEET_EASY"):
+        assert isinstance(Simulator(small_fleet(), SCENARIOS[scn]).policy,
+                          EasyBackfillPolicy)
+    bad = dc.replace(SCENARIOS["CM_G"], placement="nope")
+    with pytest.raises(ValueError):
+        Simulator(small_fleet(), bad)
+
+
+def test_gang_key_uses_uid_when_set():
+    job = Workload("j", Profile.CPU, 4, 100.0)
+    gran = select_granularity(job, small_fleet(4), "granularity")
+    anon = make_workers(job, gran)
+    named = make_workers(job, gran, uid="j#7")
+    assert TG.gang_key(anon[0]) == ("j", -1)
+    assert TG.gang_key(named[0]) == ("j#7", -1)
+
+
+def test_uid_mode_splits_same_name_gangs():
+    """Two concurrent same-name jobs: seed semantics (job_ids="name")
+    alias them into one pseudo-gang in Algorithm 4's keys; uid mode keeps
+    every submission its own gang."""
+    w = Workload("dup", Profile.CPU, 8, 300.0)
+
+    def bound_keys(scn_name):
+        sim = Simulator(small_fleet(8), SCENARIOS[scn_name], seed=0)
+        sim.submit(w, 0.0)
+        sim.submit(w, 0.0)
+        sim._try_admit(None)
+        assert not sim.queue                     # both admitted
+        return set(sim.bound.by_key)
+
+    n_groups = 8                                 # granularity policy, 8 hosts
+    assert len(bound_keys("CM_G_TG")) == n_groups          # aliased
+    assert len(bound_keys("FLEET")) == 2 * n_groups        # split by uid
+    gangs = {k[0] for k in bound_keys("FLEET")}
+    assert gangs == {"dup#0", "dup#1"}
+
+
+def test_workload_uid_passthrough():
+    """An explicit Workload.uid (the K8s job UID) wins over the generated
+    one in uid mode and is ignored in name mode."""
+    w = Workload("typ", Profile.CPU, 4, 50.0, uid="uid-abc")
+    sim = Simulator(small_fleet(4), SCENARIOS["FLEET"], seed=0)
+    sim.submit(w, 0.0)
+    assert sim.queue[0].uid == "uid-abc"
+    sim2 = Simulator(small_fleet(4), SCENARIOS["CM_G_TG"], seed=0)
+    sim2.submit(w, 0.0)
+    assert sim2.queue[0].uid == "typ"
+
+
+# ----------------------------------------------------------------------
+# EASY backfill: reservation semantics + utilization
+# ----------------------------------------------------------------------
+def _wide_narrow_subs(seed=0):
+    rng = random.Random(seed)
+    wide = Workload("wide", Profile.CPU, 112, 500.0)
+    narrow = Workload("narrow", Profile.CPU, 16, 120.0)
+    jobs = [wide] * 3 + [narrow] * 10
+    rng.shuffle(jobs)
+    return list(zip(jobs, sorted(rng.uniform(0, 400) for _ in jobs)))
+
+
+def _utilization(done):
+    busy = sum(j.gran.n_tasks * j.running_time for j in done)
+    span = max(j.finish_t for j in done) - min(j.submit_t for j in done)
+    return busy / (paper_cluster().total_slots * span)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_easy_backfill_beats_fifo_utilization(seed):
+    """The acceptance property: EASY admission never hurts utilization vs
+    plain FIFO gang admission, and narrow jobs stop queueing behind a
+    blocked wide head."""
+    subs = _wide_narrow_subs(seed)
+    fifo = Simulator(paper_cluster(), SCENARIOS["CM_G"], seed=seed)
+    d_fifo = fifo.run(list(subs))
+    easy = Simulator(paper_cluster(), SCENARIOS["CM_G_EASY"], seed=seed)
+    d_easy = easy.run(list(subs))
+    assert len(d_easy) == len(d_fifo) == len(subs)       # nothing starved
+    assert _utilization(d_easy) >= _utilization(d_fifo) - 1e-9
+    nf = sum(j.response_time for j in d_fifo if j.job.name == "narrow")
+    ne = sum(j.response_time for j in d_easy if j.job.name == "narrow")
+    assert ne <= nf
+
+
+def test_easy_reservation_blocks_head_delay():
+    """A long narrow job that would overrun the head's shadow start and eat
+    its slots must NOT be backfilled (the seed's unrestricted ``backfill``
+    flag would start it and delay the wide head)."""
+    wide = Workload("wide", Profile.CPU, 128, 100.0)     # needs all slots
+    filler = Workload("filler", Profile.CPU, 64, 50.0)
+    hog = Workload("hog", Profile.CPU, 64, 10_000.0)     # would overrun
+    subs = [(filler, 0.0), (wide, 1.0), (hog, 2.0)]
+    easy = Simulator(paper_cluster(), SCENARIOS["CM_G_EASY"], seed=0)
+    d_easy = {j.job.name: j for j in easy.run(list(subs))}
+    # hog fits *now* (64 free) but finishes way past the shadow start and
+    # exceeds the extra slots (0) -> must wait; wide starts right after
+    # filler finishes
+    assert d_easy["wide"].start_t == pytest.approx(d_easy["filler"].finish_t)
+    assert d_easy["hog"].start_t >= d_easy["wide"].start_t
+    greedy = Simulator(paper_cluster(),
+                       dc.replace(SCENARIOS["CM_G"], backfill=True), seed=0)
+    d_greedy = {j.job.name: j for j in greedy.run(list(subs))}
+    assert d_greedy["hog"].start_t < d_greedy["wide"].start_t  # the bug EASY fixes
+    assert d_easy["wide"].start_t < d_greedy["wide"].start_t
+
+
+def test_easy_admission_attempts_are_o_candidates():
+    """With zero free slots the EASY pass must attempt only the head (the
+    demand index filters everything else); the seed's backfill flag
+    attempts the whole queue at every event."""
+    hog = Workload("hog", Profile.CPU, 128, 1000.0)
+    narrow = Workload("narrow", Profile.CPU, 16, 100.0)
+    subs = [(hog, 0.0)] + [(narrow, 1.0 + i * 1e-3) for i in range(40)]
+
+    def count_place_attempts(scn):
+        sim = Simulator(paper_cluster(), scn, seed=0)
+        calls = [0]
+        orig = sim.policy.place
+
+        def counted(jr, use_index=True):
+            calls[0] += 1
+            return orig(jr, use_index)
+
+        sim.policy.place = counted
+        sim.run(list(subs))
+        return calls[0]
+
+    easy = count_place_attempts(SCENARIOS["CM_G_EASY"])
+    greedy = count_place_attempts(dc.replace(SCENARIOS["CM_G"],
+                                             backfill=True))
+    assert easy < greedy / 3
+
+
+def test_easy_shadow_node_protected_on_hetero_fleet():
+    """Aggregate extra slots are not enough on heterogeneous fleets: a
+    long narrow job must not squat on the one node the head's widest
+    worker is waiting for (the reservation's shadow node), even when its
+    demand fits the aggregate slack."""
+    cluster = hetero_cluster(((4, 8), (1, 256)))          # h0..h3 small, h4
+    filler = Workload("filler", Profile.NETWORK, 224, 100.0)  # pins h4
+    head = Workload("head", Profile.NETWORK, 240, 50.0)   # only h4 can host
+    hog = Workload("hog", Profile.NETWORK, 32, 10_000.0)  # fits h4's gap now
+    scn = SCENARIOS["CM_G_EASY"]
+    sim = Simulator(cluster, scn, seed=0)
+    done = {j.job.name: j for j in
+            sim.run([(filler, 0.0), (head, 1.0), (hog, 2.0)])}
+    assert len(done) == 3
+    # hog's demand (32) fits the aggregate extra slots, but binding it on
+    # h4 would delay the head by 10k seconds — the shadow-node rollback
+    # must hold it back until the head has started
+    assert done["head"].start_t == pytest.approx(done["filler"].finish_t)
+    assert done["hog"].start_t >= done["head"].start_t
+
+
+def test_easy_with_failures_completes_and_recovers():
+    w = Workload("job", Profile.CPU, 32, 200.0)
+    sim = Simulator(paper_cluster(), SCENARIOS["CM_G_TG_EASY"], seed=0)
+    sim.failures = [(100.0, "node0", 150.0)]
+    done = sim.run([(w, 0.0), (w, 10.0), (w, 20.0)])
+    assert len(done) == 3
+    assert sim.cluster.node("node0").n_slots == 32
+    assert sim.cluster.free_slots == sim.cluster.total_slots
+
+
+def test_easy_unschedulable_head_does_not_starve_queue():
+    """An impossible head holds no reservation (shadow = inf): everything
+    placeable backfills, and the head lands in ``unschedulable``."""
+    impossible = Workload("huge", Profile.NETWORK, 64, 100.0)  # 1 worker > 32
+    ok = Workload("ok", Profile.CPU, 16, 50.0)
+    sim = Simulator(paper_cluster(), SCENARIOS["CM_G_EASY"], seed=0)
+    done = sim.run([(impossible, 0.0), (ok, 1.0), (ok, 2.0)])
+    assert sorted(j.job.name for j in done) == ["ok", "ok"]
+    assert [j.job.name for j in sim.unschedulable] == ["huge"]
+
+
+# ----------------------------------------------------------------------
+# keyed RNG draws (uid mode): stream-stable placement for the default
+# scheduler — failed attempts leave no trace
+# ----------------------------------------------------------------------
+def test_keyed_draws_make_pre_reject_stream_stable():
+    """uid mode keys each draw by (seed, submission, worker), so a failed
+    placement attempt leaves no trace on the RNG stream.  That is what
+    makes the O(1) gang pre-reject legal for the *default* scheduler: the
+    heap loop (which skips hopeless attempts) and the legacy loop (which
+    runs and fails them) must produce identical traces.  Seed mode keeps
+    the historical shared-stream draws, where skipping an attempt would
+    shift every later placement — so there the pre-reject stays off."""
+    fleet_default = dc.replace(SCENARIOS["FLEET"], name="FLEET_DEF",
+                               taskgroup=False, placement="default",
+                               backfill=True)
+    blocker = Workload("blocker", Profile.CPU, 600, 100.0)   # never fits
+    small = Workload("small", Profile.CPU, 8, 50.0)
+    subs = [(blocker, 0.0)] + [(small, 1.0 + i) for i in range(6)]
+
+    def run(legacy, count=None):
+        sim = Simulator(small_fleet(16), fleet_default, seed=3)
+        if count is not None:
+            orig = sim.policy.place
+
+            def counted(jr, use_index=True):
+                count.append(jr.job.name)
+                return orig(jr, use_index)
+
+            sim.policy.place = counted
+        done = sim.run(list(subs), legacy=legacy)
+        return sorted((j.job.name, j.submit_t,
+                       tuple(sorted(j.nodes_used.items()))) for j in done)
+
+    attempts = []
+    heap_trace = run(False, attempts)
+    legacy_trace = run(True)
+    assert heap_trace == legacy_trace
+    # the fast path really skipped the hopeless gang: zero attempts in the
+    # heap loop (the legacy loop attempts it at every admission event)
+    assert "blocker" not in attempts

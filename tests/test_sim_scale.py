@@ -100,6 +100,65 @@ def test_heap_loop_matches_legacy_fleet_heavy_traffic():
         subs)
 
 
+# ----------------------------------------------------------------------
+# pluggable policies: heap/legacy equivalence for the new scenarios
+# (per-submission JobIds, keyed draws, EASY backfill reservations)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("scn", ["CM_G_EASY", "CM_G_TG_EASY", "FLEET",
+                                 "FLEET_EASY"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_heap_loop_matches_legacy_new_policies(scn, seed):
+    subs = poisson_heavy_traffic(120, 128, seed=seed, unique_names=False)
+    assert_equivalent(
+        lambda: Simulator(small_fleet(32), SCENARIOS[scn], seed=seed), subs)
+
+
+def test_heap_loop_matches_legacy_easy_with_failures():
+    fails = [(150.0, "h3", 200.0), (300.0, "h7", 100.0)]
+
+    def mk():
+        sim = Simulator(small_fleet(16), SCENARIOS["FLEET_EASY"], seed=0)
+        sim.failures = list(fails)
+        return sim
+
+    subs = poisson_heavy_traffic(80, 64, seed=2, unique_names=False)
+    s_new, s_old = assert_equivalent(mk, subs)
+    assert s_new.preempted == s_old.preempted >= 1
+
+
+# ----------------------------------------------------------------------
+# uid-compat mode: the seed's (job name, group) identity semantics
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("scn", ["CM_G_TG", "CM_G", "CM_G_TG_EASY"])
+def test_uid_compat_mode_reproduces_seed_name_semantics(scn):
+    """In the default ``job_ids="name"`` mode, traces must be *exactly*
+    (float-equal) invariant to the per-submission ``uid`` payloads: gang
+    identity is the job name alone, concurrent same-name jobs alias in
+    Algorithm 4 — the seed's semantics, preserved behind the compat mode
+    while ``job_ids="uid"`` eliminates the aliasing at fleet scale."""
+    subs = poisson_heavy_traffic(80, 64, seed=5, unique_names=False)
+    stripped = [(dc.replace(w, uid=None), t) for w, t in subs]
+    with_uid = Simulator(small_fleet(16), SCENARIOS[scn], seed=0)
+    d_uid = with_uid.run(list(subs))
+    without = Simulator(small_fleet(16), SCENARIOS[scn], seed=0)
+    d_no = without.run(list(stripped))
+    assert trace_of(with_uid, d_uid) == trace_of(without, d_no)
+
+
+def test_uid_mode_with_unique_names_matches_compat_taskgroup_trace():
+    """When names are already unique (the fleet generator's default), the
+    uid and name identity modes induce the same gang partition — for the
+    deterministic task-group binder the traces must coincide exactly,
+    pinning uid mode to the seed-calibrated behaviour wherever aliasing
+    cannot occur."""
+    subs = poisson_heavy_traffic(100, 64, seed=7, unique_names=True)
+    compat = Simulator(small_fleet(16), SCENARIOS["CM_G_TG"], seed=0)
+    d_compat = compat.run(list(subs))
+    fleet = Simulator(small_fleet(16), SCENARIOS["FLEET"], seed=0)
+    d_fleet = fleet.run(list(subs))
+    assert trace_of(compat, d_compat) == trace_of(fleet, d_fleet)
+
+
 def test_unschedulable_matches_legacy():
     """A gang that can never fit must land in ``unschedulable`` in both
     loops (here: a 16-slot coarse worker on 4-chip hosts)."""
