@@ -1,11 +1,13 @@
 """Fleet-scale simulator benchmark: heap event loop vs the seed loop.
 
 Drives the discrete-event simulator under Poisson heavy-traffic arrivals
-(``repro.core.scenarios.poisson_heavy_traffic``) across 256/1024/4096-host
+(``repro.core.scenarios.poisson_heavy_traffic``) across 256..8192-host
 fleets and emits ``BENCH_sim_scale.json`` with per-size wall time, µs/event
-and jobs/sec, plus the speedup of the default (heap + dirty-set + Fenwick-
-indexed cluster) loop over the ``--legacy`` seed loop (full min-scan, full
-speed refresh, O(N) feasibility scans per worker).
+and jobs/sec, plus per-phase engine counters (admit / speed-refresh / heap
+wall time, attempt and reservation counts — ``Simulator.perf``) and the
+speedup of the default (heap + dirty-set + incremental admission indexes)
+loop over the ``--legacy`` seed loop (full min-scan, full speed refresh,
+O(N) feasibility scans per worker).
 
 Four sweep modes per fleet size:
 
@@ -42,8 +44,9 @@ from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
 from repro.core.simulator import Simulator
 
 # (hosts, jobs): job counts scale sublinearly so the full sweep stays
-# minutes, with the acceptance point (4096 hosts / 10k jobs) at the top
-SIZES = ((256, 2000), (1024, 3000), (4096, 10000))
+# minutes; the incremental admission indexes keep per-event cost flat
+# through the 8192-host row
+SIZES = ((256, 2000), (1024, 3000), (4096, 10000), (8192, 15000))
 LEGACY_SIZES = (256, 1024)
 SMOKE_SIZES = ((64, 300),)
 EASY_SCENARIO = "FLEET_EASY"
@@ -79,6 +82,7 @@ def run_once(n_hosts: int, n_jobs: int, seed: int = 0, legacy: bool = False,
     t0 = time.perf_counter()
     done = sim.run(subs, legacy=legacy)
     wall = time.perf_counter() - t0
+    p = sim.perf
     return {
         "hosts": n_hosts,
         "jobs": n_jobs,
@@ -93,6 +97,16 @@ def run_once(n_hosts: int, n_jobs: int, seed: int = 0, legacy: bool = False,
         "us_per_event": round(wall / max(sim.n_events, 1) * 1e6, 2),
         "jobs_per_s": round(len(done) / wall, 1) if wall > 0 else None,
         "sim_makespan_s": round(Simulator.makespan(done), 1) if done else 0.0,
+        # per-phase attribution (reserve_s is nested inside admit_s)
+        "perf": {
+            "heap_s": round(p["heap_s"], 3),
+            "admit_s": round(p["admit_s"], 3),
+            "refresh_s": round(p["refresh_s"], 3),
+            "reserve_s": round(p["reserve_s"], 3),
+            "admit_calls": p["admit_calls"],
+            "place_attempts": p["place_attempts"],
+            "reservations": p["reservations"],
+        },
     }
 
 
@@ -143,13 +157,21 @@ def run(csv_rows=None, smoke: bool = False, legacy: bool = True,
     by_size = {}
     for r in results:
         by_size.setdefault(r["hosts"], {})[r["mode"]] = r
+        p = r["perf"]
         print(f"{r['hosts']:6d} {r['jobs']:6d} {r['mode']:>10s} "
               f"{r['wall_s']:9.2f} {r['us_per_event']:9.1f} "
-              f"{r['jobs_per_s']:8.1f}")
+              f"{r['jobs_per_s']:8.1f}   "
+              f"[admit {p['admit_s']:.2f}s / refresh {p['refresh_s']:.2f}s"
+              f" / heap {p['heap_s']:.2f}s; {p['place_attempts']} attempts"
+              f", {p['reservations']} reservations]")
         if csv_rows is not None:
             csv_rows.append((f"sim_{r['hosts']}hosts_{r['mode']}",
                              r["us_per_event"],
-                             f"jobs_per_s={r['jobs_per_s']}"))
+                             f"jobs_per_s={r['jobs_per_s']};"
+                             f"admit_s={p['admit_s']};"
+                             f"refresh_s={p['refresh_s']};"
+                             f"heap_s={p['heap_s']};"
+                             f"attempts={p['place_attempts']}"))
     speedups = {}
     for hosts, modes in by_size.items():
         if "legacy" in modes and "heap" in modes:

@@ -19,8 +19,16 @@ with no knowledge of why they were shaped that way:
   ``taskgroup``: balanced groups, affinity/anti-affinity scoring), and
   ``easy-backfill`` (head-of-queue reservations, beyond-paper);
 * ``cluster`` — the node/slot/domain model with a Fenwick free-capacity
-  index serving O(log C) feasibility queries on heterogeneous fleets;
-* gang admission and the progress-based event loop live in ``simulator``.
+  index serving O(log C) feasibility queries on heterogeneous fleets,
+  plus per-value position Fenwick trees for order-statistic queries
+  (count / select the j-th feasible node in cluster order) so uniform
+  placement sampling never materializes the candidate list;
+* gang admission and the progress-based event loop live in ``simulator``;
+  admission cost is O(polylog N) per event: the task-group binder's
+  argmax is a live ``taskgroup.ScoreIndex`` query maintained across
+  gangs, and EASY reservations are projected lazily from the engine's
+  finish heap (per-phase counters in ``Simulator.perf`` attribute the
+  remaining per-event cost).
 
 The layers meet only at the ``(Workload, Granularity, WorkerSpec)``
 hand-off, which is what makes them swappable: ``meshplan`` binds the same

@@ -20,6 +20,16 @@ large-slot superpods, where the former per-distinct-value bucket scan
 degraded to O(C) per query.  The index is kept consistent through a
 ``Node.__setattr__`` hook on ``used``/``n_slots``, so existing call sites
 (and tests) that mutate nodes directly stay correct.
+
+Order-statistic queries: alongside the value-Fenwick, a position Fenwick
+tree per present free value supports :meth:`Cluster.count_free_ge` and
+:meth:`Cluster.select_free_ge` — "how many nodes have >= k free" and "which
+is the j-th such node in cluster order" — so uniform placement sampling
+(``DefaultPolicy``) draws a feasible node without materializing the
+candidate list: O(V_k log N) per draw (V_k = distinct free values >= k,
+bounded by C) instead of O(N) per worker.  Observers (the task-group
+binder's live score index) register through :meth:`Cluster.attach` and are
+told of every per-node free-capacity change.
 """
 from __future__ import annotations
 
@@ -76,6 +86,7 @@ class Cluster:
         """(Re)build the name->node map and the Fenwick capacity index.
         Call after structural changes to ``nodes`` (never needed for plain
         ``used``/``n_slots`` mutations — those reindex automatically)."""
+        self._listeners = getattr(self, "_listeners", [])
         self._by_name: Dict[str, Node] = {}
         self._node_idx: Dict[str, int] = {}
         self._free_of: Dict[str, int] = {}
@@ -89,6 +100,16 @@ class Cluster:
         self._fen = [0] * (self._fen_size + 1)
         self._fen_log = 1 << (self._fen_size.bit_length() - 1)
         self._n_indexed = 0
+        # order-statistic layer: a position Fenwick tree per present free
+        # value.  Built lazily on the first select query (scenarios that
+        # never sample — e.g. the task-group binder — pay nothing) and
+        # maintained incrementally from then on; a drained bucket keeps
+        # its tree so re-filling stays O(log N), not an O(N) realloc.
+        self._n_nodes = len(self.nodes)
+        self._pos_log = ((1 << (self._n_nodes.bit_length() - 1))
+                         if self._n_nodes else 0)
+        self._pos_fen: Dict[int, list] = {}
+        self._pos_active = False
         for i, n in enumerate(self.nodes):
             object.__setattr__(n, "_cluster", self)
             self._by_name[n.name] = n
@@ -100,6 +121,20 @@ class Cluster:
             self._fen_add(v, +1)
             self._n_indexed += 1
             self._free_total += f
+        for lst in self._listeners:
+            lst.on_rebuild()
+
+    def attach(self, listener):
+        """Register a capacity observer: ``on_free_change(name, free)``
+        fires on every per-node free-capacity change, ``on_rebuild()``
+        after structural reindexing (the observer should resync).
+        Observers live as long as the cluster — callers that reuse one
+        cluster across schedulers should :meth:`detach` retired ones."""
+        self._listeners.append(listener)
+
+    def detach(self, listener):
+        if listener in self._listeners:
+            self._listeners.remove(listener)
 
     def _clamp(self, v: int) -> int:
         return 0 if v < 0 else (self._cap_max if v > self._cap_max else v)
@@ -110,6 +145,56 @@ class Cluster:
         while i <= size:
             fen[i] += d
             i += i & -i
+
+    def _pos_add(self, v: int, pos: int, d: int):
+        """Position-Fenwick update for free-value bucket ``v``."""
+        fen = self._pos_fen.get(v)
+        if fen is None:
+            fen = self._pos_fen[v] = [0] * (self._n_nodes + 1)
+        i = pos + 1
+        size = self._n_nodes
+        while i <= size:
+            fen[i] += d
+            i += i & -i
+
+    def count_free_ge(self, k: int) -> int:
+        """Number of nodes with ``free >= k`` — O(log C).  ``k`` must be
+        >= 1 (stored free values are clamped at 0)."""
+        if k > self._cap_max:
+            return 0
+        return self._n_indexed - (self._fen_prefix(k - 1) if k > 0 else 0)
+
+    def _pos_activate(self):
+        """First-use build of the position Fenwick trees (O(N log N));
+        afterwards ``_reindex`` maintains them at O(log N) per change."""
+        self._pos_fen.clear()
+        node_idx = self._node_idx
+        for name, f in self._free_of.items():
+            self._pos_add(self._clamp(f), node_idx[name], +1)
+        self._pos_active = True
+
+    def select_free_ge(self, k: int, j: int) -> int:
+        """Cluster index of the ``j``-th (0-based, cluster order) node with
+        ``free >= k`` — an order-statistic query answered by a parallel
+        binary descent over the per-free-value position Fenwick trees:
+        O(V_k log N), V_k = distinct free values >= k present (<= C+1).
+        ``j`` must be < :meth:`count_free_ge`\\ ``(k)``."""
+        if not self._pos_active:
+            self._pos_activate()
+        trees = [self._pos_fen[v] for v in self._members if v >= k]
+        pos, rem, bit = 0, j + 1, self._pos_log
+        size = self._n_nodes
+        while bit:
+            npos = pos + bit
+            if npos <= size:
+                s = 0
+                for fen in trees:
+                    s += fen[npos]
+                if s < rem:
+                    pos = npos
+                    rem -= s
+            bit >>= 1
+        return pos
 
     def _fen_prefix(self, v: int) -> int:
         """Count of indexed nodes with clamped free value <= v."""
@@ -163,8 +248,14 @@ class Cluster:
             self._members.setdefault(nv, set()).add(node.name)
             self._fen_add(ov, -1)
             self._fen_add(nv, +1)
+            if self._pos_active:
+                pos = self._node_idx[node.name]
+                self._pos_add(ov, pos, -1)
+                self._pos_add(nv, pos, +1)
         self._free_of[node.name] = new
         self._free_total += new - old
+        for lst in self._listeners:
+            lst.on_free_change(node.name, new)
 
     # below this many distinct free values a plain dict scan beats the
     # Fenwick descent (homogeneous fleets have <= slots+1 of them)

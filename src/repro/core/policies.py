@@ -35,12 +35,23 @@ Three policies ship here:
 
 Placement mechanism (default vs task-group) composes with EASY admission:
 ``easy-backfill`` reads ``scenario.taskgroup`` to pick its binder.
+
+Admission complexity (fleet scale): no policy rebuilds an O(N) candidate
+structure per attempt.  ``default`` in uid mode draws a uniform feasible
+node by order-statistic sampling off the cluster's position Fenwick trees
+(:meth:`DefaultPolicy._draw_indexed`); ``taskgroup`` queries the live
+``taskgroup.ScoreIndex`` instead of heapifying the feasible set per gang;
+``easy-backfill`` projects its reservation lazily from the engine's finish
+heap instead of re-heapifying all running jobs.  Per-event admission cost
+is O(polylog N) — flat in fleet size — and every placement attempt /
+reservation recompute is counted in ``Simulator.perf``.
 """
 from __future__ import annotations
 
 import bisect
 import heapq
 import random
+import time
 from typing import Dict, List, Optional
 
 from repro.core import taskgroup as TG
@@ -142,6 +153,14 @@ class DefaultPolicy(PlacementPolicy):
       Failed (or skipped) attempts leave no trace, which is what makes the
       O(1) gang pre-reject stream-stable, and makes placement a pure
       function of (cluster state, key) — identical across event loops.
+
+    In uid mode with the index on, the uniform draw is *order-statistic
+    sampling*: count the feasible nodes off the capacity index, draw the
+    rank with the keyed RNG, and select the j-th feasible node in cluster
+    order straight off the per-value position Fenwick trees — draw-for-draw
+    identical to materializing ``feasible_nodes`` and indexing into it,
+    without the O(N) list per worker.  ``name`` mode keeps the seed path
+    (shared-stream draws over the materialized list).
     """
 
     name = "default"
@@ -154,35 +173,105 @@ class DefaultPolicy(PlacementPolicy):
 
     def place(self, jr, use_index: bool = True):
         sim = self.sim
+        sim.perf["place_attempts"] += 1
+        cluster = sim.cluster
         keyed = sim.sc.job_ids == "uid"
         workers = make_workers(jr.job, jr.gran, uid=jr.uid)
         staged: Dict[str, int] = {}
         for wi, w in enumerate(workers):
-            if use_index:
-                feas = sim.cluster.feasible_nodes(w.n_tasks, staged)
+            # keyed draws MUST be identical across the indexed and
+            # materialized paths (the trace-identity contract) — one key
+            key = ((sim._base_seed * 1_000_003 + jr._seq) * 1_000_003 + wi
+                   if keyed else None)
+            if keyed and use_index:
+                best = self._draw_indexed(cluster, w.n_tasks, staged, key)
+                if best is None:
+                    return None
             else:
-                feas = [n for n in sim.cluster.nodes
-                        if n.free - staged.get(n.name, 0) >= w.n_tasks]
-            if not feas:
-                return None
-            if keyed:
-                key = (sim._base_seed * 1_000_003 + jr._seq) \
-                    * 1_000_003 + wi
-                best = feas[random.Random(key).randrange(len(feas))]
-            else:
-                best = sim.rng.choice(feas)
+                if use_index:
+                    feas = cluster.feasible_nodes(w.n_tasks, staged)
+                else:
+                    feas = [n for n in cluster.nodes
+                            if n.free - staged.get(n.name, 0) >= w.n_tasks]
+                if not feas:
+                    return None
+                if keyed:
+                    best = feas[random.Random(key).randrange(len(feas))]
+                else:
+                    best = sim.rng.choice(feas)
             w.node = best.name
             staged[best.name] = staged.get(best.name, 0) + w.n_tasks
         for w in workers:
-            sim.cluster.node(w.node).used += w.n_tasks
+            cluster.node(w.node).used += w.n_tasks
             sim.bound.add(w)
         return workers
 
+    @staticmethod
+    def _draw_indexed(cluster, need, staged, key):
+        """Order-statistic uniform draw: pick the j-th feasible node (in
+        cluster order) off the capacity index — draw-for-draw identical to
+        ``feasible_nodes(need, staged)[Random(key).randrange(m)]`` without
+        materializing the list.  The staged overlay is a rank correction:
+        nodes the index counts feasible but the overlay rules out are
+        excluded by iterating the select to the fixpoint rank (at most
+        |staged|+1 selects, each O(log C · log N)-ish)."""
+        m = cluster.count_free_ge(need)
+        excl = None
+        if staged:
+            for name, s in staged.items():
+                node = cluster.node(name)
+                f = node.n_slots - node.used
+                if f >= need and f - s < need:
+                    if excl is None:
+                        excl = []
+                    excl.append(cluster.node_index(name))
+            if excl:
+                m -= len(excl)
+        if m <= 0:
+            return None
+        j = random.Random(key).randrange(m)
+        if not excl:
+            return cluster.nodes[cluster.select_free_ge(need, j)]
+        excl.sort()
+        jj = j
+        while True:
+            idx = cluster.select_free_ge(need, jj)
+            c = bisect.bisect_right(excl, idx)
+            if jj == j + c:
+                return cluster.nodes[idx]
+            jj = j + c
+
 
 class TaskGroupPolicy(PlacementPolicy):
-    """Algorithms 3+4 binding (balanced groups, affinity scoring)."""
+    """Algorithms 3+4 binding (balanced groups, affinity scoring).
+
+    The binder's per-worker argmax is served by a live
+    :class:`~repro.core.taskgroup.ScoreIndex` (created lazily on the first
+    indexed placement, then maintained incrementally by the bound-index
+    and cluster-capacity hooks) — placement cost is flat in fleet size.
+    On small fleets the per-gang heap walk's O(F) rebuild is cheaper than
+    per-worker index queries, so the index only engages above
+    ``_INDEX_MIN_NODES`` (both paths compute the identical argmax — the
+    hybrid is a constant-factor choice, not a semantic one).  The legacy
+    path (``use_index=False``) touches neither."""
 
     name = "taskgroup"
+
+    # measured crossover: at 256 hosts the walk wins, at 1024 the index
+    _INDEX_MIN_NODES = 512
+
+    def __init__(self, sim):
+        super().__init__(sim)
+        self._sindex = None
+
+    def _score_index(self):
+        si = self._sindex
+        if si is None:
+            if len(self.sim.cluster.nodes) < self._INDEX_MIN_NODES:
+                return None
+            si = self._sindex = TG.ScoreIndex(self.sim.cluster,
+                                              self.sim.bound)
+        return si
 
     def pre_reject(self, jr, use_index: bool) -> bool:
         if not use_index:
@@ -192,6 +281,7 @@ class TaskGroupPolicy(PlacementPolicy):
 
     def place(self, jr, use_index: bool = True):
         sim = self.sim
+        sim.perf["place_attempts"] += 1
         if not use_index:            # legacy: rebuild the gang every attempt
             workers = make_workers(jr.job, jr.gran, uid=jr.uid)
             return TG.schedule_job(sim.cluster, workers, jr.gran.n_groups,
@@ -201,7 +291,8 @@ class TaskGroupPolicy(PlacementPolicy):
             jr._plan = (workers, TG.make_plan(workers, jr.gran.n_groups))
         workers, plan = jr._plan
         return TG.schedule_job(sim.cluster, workers, jr.gran.n_groups,
-                               bound=sim.bound, use_index=True, plan=plan)
+                               bound=sim.bound, use_index=True, plan=plan,
+                               score_index=self._score_index())
 
 
 class EasyBackfillPolicy(PlacementPolicy):
@@ -265,18 +356,56 @@ class EasyBackfillPolicy(PlacementPolicy):
                              if e[2] not in self._gone]
             self._gone.clear()
 
-    def _reservation(self, head):
+    def _finish_order(self):
+        """Predicted finishes of running jobs in ``(time, seq)`` order,
+        lazily: valid entries of the engine's finish heap (one per pushed
+        running job, each exactly ``synced_t + remaining/speed``) merged
+        with the few jobs started since the last speed refresh (not yet
+        pushed).  The heap array is walked in sorted order by expanding
+        heap-children through an auxiliary index heap — O(log R) per
+        finish consumed, no O(R) rebuild or copy."""
+        sim = self.sim
+        heap = sim._finish_heap
+        n = len(heap)
+        aux = [(heap[0][0], heap[0][1], 0)] if n else []
+        fresh = [(jr._synced_t + jr.remaining / jr.speed, jr._seq, jr)
+                 for jr in sim._fresh_starts if jr in sim.running]
+        heapq.heapify(fresh)
+        while aux or fresh:
+            if aux and (not fresh or aux[0][:2] <= fresh[0][:2]):
+                _, _, i = heapq.heappop(aux)
+                left = 2 * i + 1
+                if left < n:
+                    e = heap[left]
+                    heapq.heappush(aux, (e[0], e[1], left))
+                    if left + 1 < n:
+                        e = heap[left + 1]
+                        heapq.heappush(aux, (e[0], e[1], left + 1))
+                e = heap[i]
+                if e[2] != e[3]._ver:
+                    continue                  # stale entry: skip, don't yield
+                yield e[0], e[3]
+            else:
+                t, _, jr = heapq.heappop(fresh)
+                yield t, jr
+
+    def _reservation(self, head, use_index: bool = True):
         """Shadow start time + extra slots + (shadow node, its slack) for
-        the blocked head, from the running jobs' predicted completions
-        (O(k log R) for the k finishes needed) — cached until cluster
-        capacity next changes.  The shadow node is the node whose
-        projected drain first reaches the head's widest-worker demand;
-        its slack is the projected surplus beyond that demand, the only
-        part of the node slack-window backfills may consume."""
+        the blocked head, from the running jobs' predicted completions —
+        cached until cluster capacity next changes.  With the index on,
+        finishes come lazily off the engine's finish heap
+        (:meth:`_finish_order`): O(k log R) for the k finishes the
+        projection needs, instead of re-heapifying all running jobs per
+        capacity change.  The shadow node is the node whose projected
+        drain first reaches the head's widest-worker demand; its slack is
+        the projected surplus beyond that demand, the only part of the
+        node slack-window backfills may consume."""
         sim = self.sim
         if self._resv is not None and self._resv[0] is head \
                 and self._resv[1] == sim._cap_ver:
             return self._resv[2:]
+        t_resv = time.perf_counter()
+        sim.perf["reservations"] += 1
         cluster = sim.cluster
         need_total = head.gran.n_tasks
         need_worker = head.gran.tasks_per_worker
@@ -290,12 +419,22 @@ class EasyBackfillPolicy(PlacementPolicy):
         # to protect and backfills stay unrestricted across nodes.
         track_node = cur_max < need_worker
         shadow_node = None
-        ev = [(jr._synced_t + jr.remaining / jr.speed, jr._seq, jr)
-              for jr in sim.running]
-        heapq.heapify(ev)
+        if use_index:
+            events = self._finish_order()
+        else:                        # legacy loop: no finish heap to share
+            ev = [(jr._synced_t + jr.remaining / jr.speed, jr._seq, jr)
+                  for jr in sim.running]
+            heapq.heapify(ev)
+
+            def _drain(ev=ev):
+                while ev:
+                    t, _, jr = heapq.heappop(ev)
+                    yield t, jr
+            events = _drain()
         node_free: Dict[str, int] = {}
-        while ev and (free_total < need_total or cur_max < need_worker):
-            t, _, jr = heapq.heappop(ev)
+        for t, jr in events:
+            if free_total >= need_total and cur_max >= need_worker:
+                break
             shadow = max(shadow, t)
             for node, tasks in jr.nodes_used.items():
                 f = node_free.get(node)
@@ -324,6 +463,7 @@ class EasyBackfillPolicy(PlacementPolicy):
             shadow_slack = projected - need_worker
         self._resv = (head, sim._cap_ver, shadow, extra, shadow_node,
                       shadow_slack)
+        sim.perf["reserve_s"] += time.perf_counter() - t_resv
         return shadow, extra, shadow_node, shadow_slack
 
     def admit(self, dirty_nodes: Optional[set], use_index: bool = True):
@@ -339,7 +479,7 @@ class EasyBackfillPolicy(PlacementPolicy):
             # head blocked: reserve, then one windowed backfill pass over
             # candidates only (gangs whose demand fits current free slots)
             shadow, extra, shadow_node, shadow_slack = \
-                self._reservation(head)
+                self._reservation(head, use_index)
             free = sim.cluster.free_slots
             hi = bisect.bisect_right(self._demands, (free, float("inf")))
             cands = sorted(

@@ -31,20 +31,33 @@ The default loop is built for 4096-host / 10k-job fleets:
   (piecewise-linear progress is integrated only when a job's speed changes).
 * **incremental state** — per-node memory-bandwidth load and the per-node
   bound-worker sets/count maps (shared with ``taskgroup``) are maintained
-  on admit/finish/fail instead of rebuilt per event, and the cluster's
-  free-capacity bucket index makes feasibility filtering O(feasible) rather
-  than O(N) per worker.
+  on admit/finish/fail instead of rebuilt per event.
+* **incremental admission indexes** — placement no longer rebuilds O(N)
+  candidate structures per gang attempt: the task-group binder's argmax is
+  a live ``taskgroup.ScoreIndex`` query (maintained on every bind/unbind/
+  capacity change), uid-mode default placement draws a uniform feasible
+  node by order-statistic sampling off the cluster's position Fenwick
+  trees, and the EASY reservation projects its shadow time lazily from
+  this engine's finish heap instead of re-heapifying all running jobs —
+  so per-event admission cost is O(polylog N), flat in fleet size.
 
-Per event the cost is O(|dirty jobs| + log R) instead of the seed's
-O(R · W + N); ``run(..., legacy=True)`` keeps the seed's full-rescan loop
-(identical semantics, measured by ``benchmarks/sim_scale.py`` as the
-pre-optimization baseline).
+Per event the cost is O(|dirty jobs| + log R + polylog N) instead of the
+seed's O(R · W + N); ``run(..., legacy=True)`` keeps the seed's
+full-rescan loop (identical semantics, measured by
+``benchmarks/sim_scale.py`` as the pre-optimization baseline).
+
+Per-phase perf counters (``Simulator.perf``) record wall time spent in the
+event/heap phase, admission, and speed refresh, plus the EASY reservation
+slice nested inside admission (``reserve_s``), and exact attempt counts —
+surfaced by ``benchmarks/sim_scale.py`` so per-event cost can be
+attributed without a profiler.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import random
+import time
 from typing import Dict, List, Optional
 
 from repro.core import policies as POL
@@ -120,6 +133,7 @@ class JobRun:                            # per-node running-jobs index
     _synced_t: float = dataclasses.field(default=0.0, repr=False)
     _ver: int = dataclasses.field(default=0, repr=False)
     _seq: int = dataclasses.field(default=0, repr=False)
+    _run_seq: int = dataclasses.field(default=0, repr=False)
     _pushed: bool = dataclasses.field(default=False, repr=False)
     _nodes: Optional[Dict[str, int]] = dataclasses.field(default=None,
                                                          repr=False)
@@ -184,9 +198,23 @@ class Simulator:
         self._node_jobs: Dict[str, set] = {}   # node -> running JobRuns
         self._mem_load_live: Dict[str, float] = {}
         self._finish_heap: List[tuple] = []
+        # jobs started since the last speed refresh: running, but not yet
+        # holding a valid finish-heap entry (EASY reservations merge them
+        # with the heap's predictions)
+        self._fresh_starts: List[JobRun] = []
+        self._run_counter = 0                  # admission order stamp
         # monotone floor over every speed ever assigned (speeds are <= 1);
         # bounds the completion-scan window in the event loop
         self._speed_floor = 1.0
+        # per-phase counters: wall time in the heap/event phase, admission
+        # and speed refresh (reserve_s is the EASY-reservation slice
+        # *nested inside* admit_s), plus exact attempt counts.
+        # admit_calls == events, except a run ending in the unschedulable
+        # deadlock break (its final scan holds no admission pass)
+        self.perf: Dict[str, float] = {
+            "events": 0, "admit_calls": 0, "place_attempts": 0,
+            "reservations": 0, "heap_s": 0.0, "admit_s": 0.0,
+            "refresh_s": 0.0, "reserve_s": 0.0, "wall_s": 0.0}
         self.policy = POL.make_policy(self)    # infrastructure-layer policy
 
     # ---------------- submission -----------------------------------------
@@ -218,12 +246,16 @@ class Simulator:
         """Admission is delegated to the scenario's placement policy (see
         ``repro.core.policies``): FIFO/skip-ahead with default or task-group
         binding, or EASY backfill with a head-of-queue reservation."""
+        self.perf["admit_calls"] += 1
         self.policy.admit(dirty_nodes, use_index)
 
     # ---------------- incremental cluster-state bookkeeping ----------------
     def _on_start(self, jr: JobRun, dirty_nodes: Optional[set]):
         self._cap_ver += 1
         self.running[jr] = None
+        jr._run_seq = self._run_counter        # admission order, for
+        self._run_counter += 1                 # order-stable victim scans
+        self._fresh_starts.append(jr)
         self._pin_domains(jr)
         jr._nodes = None
         nodes = {}
@@ -332,14 +364,21 @@ class Simulator:
                 load[node] = load.get(node, 0.0) + w_mem * tasks
         return load
 
-    def _sharing_jobs(self, jr: JobRun) -> int:
-        """Number of *other* running jobs sharing any of this job's nodes."""
-        seen = set()
+    def _sharing_jobs(self, jr: JobRun, cap: Optional[int] = None) -> int:
+        """Number of *other* running jobs sharing any of this job's nodes.
+        The speed model reads this through ``min(share_cap, ·)``, so with
+        ``cap`` the union stops growing the moment the clamp is decided
+        instead of materializing every co-resident on every node."""
+        seen: set = set()
         for node in jr.nodes_used:
             jobs = self._node_jobs.get(node)
             if jobs:
                 seen |= jobs
+                if cap is not None and len(seen) > cap:
+                    return cap        # >= cap others even if jr is in seen
         seen.discard(jr)
+        if cap is not None and len(seen) >= cap:
+            return cap
         return len(seen)
 
     def _speed(self, jr: JobRun, mem_load: Dict[str, float]) -> float:
@@ -348,8 +387,8 @@ class Simulator:
         tpw = jr.gran.tasks_per_worker
         f = 1.0
         if not self.sc.affinity:
-            f *= 1.0 + p.share_no_affinity * min(p.share_cap,
-                                                 self._sharing_jobs(jr))
+            f *= 1.0 + p.share_no_affinity * \
+                self._sharing_jobs(jr, p.share_cap)
         if prof in (Profile.CPU, Profile.MIXED):
             fc = _cpu_factor(p, self.sc.affinity, tpw)
             f *= fc if prof == Profile.CPU else fc ** 0.5
@@ -372,13 +411,19 @@ class Simulator:
 
     def _refresh_speeds(self):
         """Legacy full refresh: every running job, mem load rebuilt."""
+        if self._fresh_starts:
+            self._fresh_starts.clear()
         mem_load = self._mem_load()
         for jr in self.running:
             jr.speed = self._speed(jr, mem_load)
 
     def _refresh_dirty(self, dirty_nodes: set):
         """Recompute speed + heap entry only for jobs co-located with a
-        placement change; everyone else's heap entry stays valid."""
+        placement change; everyone else's heap entry stays valid.  Every
+        fresh start is on a dirty node, so after this refresh each running
+        job holds a valid finish-heap entry — ``_fresh_starts`` drains."""
+        if self._fresh_starts:
+            self._fresh_starts.clear()
         if not dirty_nodes:
             return
         dirty = set()
@@ -424,8 +469,12 @@ class Simulator:
         fails = list(getattr(self, "failures", []))
         heapq.heapify(fails)
         heap = self._finish_heap
+        perf = self.perf
+        pc = time.perf_counter
+        t_run = pc()
         idx = 0
         while idx < len(pending) or self.queue or self.running:
+            t0 = pc()
             self.n_events += 1
             if not self.running and idx >= len(pending) and self.queue \
                     and not fails:
@@ -477,8 +526,16 @@ class Simulator:
             while idx < len(pending) and pending[idx][1] <= self.now + 1e-12:
                 self.submit(pending[idx][0], pending[idx][1])
                 idx += 1
+            t1 = pc()
             self._try_admit(dirty, use_index=True)
+            t2 = pc()
             self._refresh_dirty(dirty)
+            t3 = pc()
+            perf["heap_s"] += t1 - t0
+            perf["admit_s"] += t2 - t1
+            perf["refresh_s"] += t3 - t2
+        perf["wall_s"] += pc() - t_run
+        perf["events"] = self.n_events
         return self.done
 
     def _run_legacy(self, submissions: List[tuple]) -> List[JobRun]:
@@ -488,8 +545,12 @@ class Simulator:
         pending = sorted(submissions, key=lambda s: s[1])
         fails = list(getattr(self, "failures", []))
         heapq.heapify(fails)
+        perf = self.perf
+        pc = time.perf_counter
+        t_run = pc()
         idx = 0
         while idx < len(pending) or self.queue or self.running:
+            t0 = pc()
             self.n_events += 1
             if not self.running and idx >= len(pending) and self.queue \
                     and not fails:
@@ -525,8 +586,16 @@ class Simulator:
             while idx < len(pending) and pending[idx][1] <= self.now + 1e-12:
                 self.submit(pending[idx][0], pending[idx][1])
                 idx += 1
+            t1 = pc()
             self._try_admit(None, use_index=False)
+            t2 = pc()
             self._refresh_speeds()
+            t3 = pc()
+            perf["heap_s"] += t1 - t0
+            perf["admit_s"] += t2 - t1
+            perf["refresh_s"] += t3 - t2
+        perf["wall_s"] += pc() - t_run
+        perf["events"] = self.n_events
         return self.done
 
     # ---------------- fault handling ---------------------------------------
@@ -547,8 +616,12 @@ class Simulator:
             # encode "restore 0 slots" as -0.0, which the `< 0` recovery
             # check misreads as a failure — an infinite self-re-push.)
             return
-        on_node = self._node_jobs.get(node_name, set())
-        victims = [jr for jr in self.running if jr in on_node]
+        # victims in admission order: sorting the node's own job set by its
+        # ``_run_seq`` stamp reproduces the running-dict insertion order a
+        # full O(R) membership scan used to deliver — identical requeue
+        # order at O(|on_node| log |on_node|) per failure event
+        on_node = self._node_jobs.get(node_name, ())
+        victims = sorted(on_node, key=lambda j: j._run_seq)
         for jr in victims:
             self._sync(jr)
             self._on_stop(jr, dirty_nodes)

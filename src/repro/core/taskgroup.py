@@ -19,6 +19,11 @@ Fleet-scale implementation notes: bound workers are tracked in a
 ``(gang, group) -> count`` maps — so a scoring decision reads O(1) state per
 candidate node instead of rescanning bound lists, and candidate nodes come
 from the cluster's Fenwick free-capacity index instead of an O(N) scan.
+The binder's argmax itself is served by a :class:`ScoreIndex` — a live
+``(busy-level, node index)`` ordering over free capacity, updated
+incrementally on every bind/unbind/capacity change — so choosing the best
+"plain" node is an O(polylog) query instead of the per-gang O(F) heap
+rebuild (kept as the oracle path when no index is supplied).
 
 Gang identity (:func:`gang_key`) is the worker's per-submission ``uid`` when
 set, else the job *name* — the seed's ``(job name, group)`` key, under which
@@ -58,22 +63,29 @@ class BoundIndex:
     ``workers[node]`` is a set (O(1) add/remove — the seed used O(W) list
     membership); ``counts[node]`` is the ``gang_key -> count`` map that
     Algorithm 4 reads, maintained incrementally instead of rebuilt per
-    scheduling decision.
+    scheduling decision.  ``listeners`` (e.g. a :class:`ScoreIndex`) are
+    told whenever a node's *busy level* — its count of distinct gang keys
+    — changes.
     """
 
-    __slots__ = ("workers", "counts", "by_key")
+    __slots__ = ("workers", "counts", "by_key", "listeners")
 
     def __init__(self):
         self.workers: Dict[str, set] = {}
         self.counts: Dict[str, Dict] = {}
         self.by_key: Dict[tuple, set] = {}   # gang_key -> {node names}
+        self.listeners: list = []
 
     def add(self, w: WorkerSpec):
         self.workers.setdefault(w.node, set()).add(w)
         c = self.counts.setdefault(w.node, {})
         key = gang_key(w)
-        c[key] = c.get(key, 0) + 1
-        self.by_key.setdefault(key, set()).add(w.node)
+        n = c.get(key, 0)
+        c[key] = n + 1
+        if n == 0:
+            self.by_key.setdefault(key, set()).add(w.node)
+            for lst in self.listeners:
+                lst.on_level_change(w.node, len(c))
 
     def remove(self, w: WorkerSpec):
         ws = self.workers.get(w.node)
@@ -92,11 +104,158 @@ class BoundIndex:
                     nodes.discard(w.node)
                     if not nodes:
                         del self.by_key[key]
+                for lst in self.listeners:
+                    lst.on_level_change(w.node, len(c))
 
     def get(self, node_name: str, default=()):
         """Dict-compatible accessor used by :func:`node_score`."""
         ws = self.workers.get(node_name)
         return ws if ws is not None else default
+
+
+class ScoreIndex:
+    """Persistent argmax index for the task-group binder (Algorithm 4).
+
+    A node neither staged by the current gang nor holding the worker's own
+    gang key ("plain") scores exactly ``gsize - L``, where L is the node's
+    *busy level* — the number of distinct gang keys bound to it — with ties
+    broken by lowest cluster index.  The binder's best plain candidate for
+    a worker needing ``k`` slots is therefore the lexicographic min
+    ``(L, idx)`` over nodes with ``free >= k``.  ``schedule_job`` used to
+    rebuild that ordering per gang as a heap over every feasible node
+    (O(F) per gang, O(N) at fleet scale); this index keeps it live:
+
+    * buckets keyed ``(L, free)`` hold lazy min-heaps of node indices —
+      a node's current ``(L, free)`` assignment is authoritative, entries
+      left behind by older assignments are dropped at query time;
+    * :class:`BoundIndex` reports busy-level changes and the cluster's
+      auto-reindex hook reports free-capacity changes; change events go
+      into a dirty set and are flushed at the next query, so a node
+      touched many times between queries (multi-worker commits, the EASY
+      shadow-node mask/unmask) costs one O(log N) push — or none when its
+      ``(L, free)`` reverted;
+    * :meth:`best_plain` walks busy levels ascending and peeks the
+      min-index heap of each free-value bucket >= k: O(L·V·log N) with
+      both L and V bounded by the node size C — flat in fleet size;
+    * a push budget triggers a periodic O(N) compaction so stale entries
+      in never-queried buckets cannot accumulate (amortized O(1)/push).
+    """
+
+    def __init__(self, cluster: Cluster, bound: BoundIndex):
+        self.cluster = cluster
+        self.bound = bound
+        cluster.attach(self)
+        bound.listeners.append(self)
+        self.on_rebuild()
+
+    def on_rebuild(self):
+        """Full resync from cluster + bound state (also the periodic
+        compaction: rebuilding drops every stale heap entry)."""
+        nodes = self.cluster.nodes
+        counts = self.bound.counts
+        self._lv = [0] * len(nodes)
+        self._fr = [0] * len(nodes)
+        self._by_level: Dict[int, Dict[int, list]] = {}
+        self._dirty: set = set()
+        for i, n in enumerate(nodes):
+            L = len(counts.get(n.name, ()))
+            f = n.n_slots - n.used
+            self._lv[i] = L
+            self._fr[i] = f
+            self._by_level.setdefault(L, {}).setdefault(f, []).append(i)
+        for lvl in self._by_level.values():
+            for h in lvl.values():
+                heapq.heapify(h)
+        self._pushes = 0
+        self._push_budget = 4 * len(nodes) + 256
+
+    # -- incremental maintenance ------------------------------------------
+    # Change events only mark the node dirty (set add); the real state is
+    # re-read from cluster + bound at flush time, so churn between queries
+    # collapses into at most one push per touched node.
+    def on_free_change(self, name: str, free: int):
+        self._dirty.add(name)
+
+    def on_level_change(self, name: str, level: int):
+        self._dirty.add(name)
+
+    def _flush(self):
+        cluster = self.cluster
+        counts = self.bound.counts
+        node_idx = cluster.node_index
+        # swap before iterating: a budget-triggered on_rebuild() inside
+        # _push replaces the arrays and dirty set mid-flush (the remaining
+        # names then compare equal against the resynced state — no-ops)
+        dirty, self._dirty = self._dirty, set()
+        for name in dirty:
+            idx = node_idx(name)
+            n = cluster.nodes[idx]
+            L = len(counts.get(name, ()))
+            f = n.n_slots - n.used
+            if self._lv[idx] != L or self._fr[idx] != f:
+                self._lv[idx] = L
+                self._fr[idx] = f
+                self._push(idx, L, f)
+
+    def _push(self, idx: int, level: int, free: int):
+        self._pushes += 1
+        if self._pushes > self._push_budget:
+            self.on_rebuild()                 # amortized stale-entry purge
+            return
+        lvl = self._by_level.setdefault(level, {})
+        heap = lvl.get(free)
+        if heap is None:
+            lvl[free] = [idx]
+        else:
+            heapq.heappush(heap, idx)
+
+    # -- query -------------------------------------------------------------
+    def best_plain(self, need: int, staged_idx) -> Optional[tuple]:
+        """Lexicographic min ``(busy level, node idx)`` among nodes with
+        ``free >= need``, excluding ``staged_idx`` (the current gang's
+        staged nodes — those are scored separately as specials).  Exactly
+        the top the per-gang heap walk would surface."""
+        if self._dirty:
+            self._flush()
+        lv, fr = self._lv, self._fr
+        by_level = self._by_level
+        for level in sorted(by_level):
+            lvl = by_level[level]
+            best = -1
+            dead = None
+            for free in lvl:
+                if free < need:
+                    continue
+                heap = lvl[free]
+                restore = None
+                while heap:
+                    idx = heap[0]
+                    if lv[idx] != level or fr[idx] != free:
+                        heapq.heappop(heap)   # stale: node moved on
+                        continue
+                    if idx in staged_idx:     # special, not plain
+                        if restore is None:
+                            restore = []
+                        restore.append(heapq.heappop(heap))
+                        continue
+                    break
+                if heap and (best < 0 or heap[0] < best):
+                    best = heap[0]
+                if restore:
+                    for r in restore:
+                        heapq.heappush(heap, r)
+                elif not heap:
+                    if dead is None:
+                        dead = []
+                    dead.append(free)
+            if dead:
+                for free in dead:
+                    del lvl[free]
+                if not lvl:
+                    del by_level[level]
+            if best >= 0:
+                return level, best
+        return None
 
 
 def build_groups(n_groups: int, workers: Sequence[WorkerSpec]) -> List[Group]:
@@ -175,7 +334,9 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
                  bound=None,
                  commit: bool = True,
                  use_index: bool = True,
-                 plan=None) -> Optional[List[WorkerSpec]]:
+                 plan=None,
+                 score_index: Optional[ScoreIndex] = None,
+                 ) -> Optional[List[WorkerSpec]]:
     """Algorithms 3+4 end-to-end for one job (gang semantics).
 
     Returns the workers with ``node`` assigned, or None if the gang does not
@@ -185,15 +346,18 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
     directly — nothing is rebuilt) or a plain ``{node: [workers]}`` dict
     (counts are derived once, the seed behaviour).  With ``use_index`` and
     no custom predicate, candidate nodes come from the cluster's
-    free-capacity buckets, so a decision costs O(workers x feasible nodes)
-    instead of O(workers x all nodes); scoring is O(1) per candidate via
+    free-capacity buckets; scoring is O(1) per candidate via
     ``len(counts)`` + a small staged overlay; and two O(1) capacity
     pre-checks (gang total vs free slots, biggest worker vs emptiest node)
     reject hopeless gangs without touching any node.  ``plan`` is an
     optional precomputed ``make_plan`` result (the simulator caches it
-    across blocked-head retries).  ``use_index=False`` restores the seed's
-    full O(workers x N) scan (kept for the ``--legacy`` benchmark
-    baseline).
+    across blocked-head retries).  ``score_index`` is the live
+    :class:`ScoreIndex` over (busy level, node index): with it, the best
+    plain node per worker is an O(polylog) query and a gang decision is
+    O(W·(specials + polylog)) — independent of fleet size; without it the
+    per-gang heap walk (O(F + W·log F)) is used, and ``use_index=False``
+    restores the seed's full O(workers x N) scan (kept for the
+    ``--legacy`` benchmark baseline and as the equivalence oracle).
     """
     workers = list(workers)
     indexed = use_index and predicate is None
@@ -224,6 +388,7 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
     sc_get = staged_counts.get
     placed: List[WorkerSpec] = []
     walk_cache: Dict[int, list] = {}
+    staged_idx: set = set()        # staged node indices (score-index path)
 
     def full_score(name, key_w, gsize):
         """Algorithm 4 score with the staged overlay merged in — exactly
@@ -243,22 +408,17 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
         need = w.n_tasks
         best, best_rank = None, None
         if indexed and is_bindex:
-            # Heap-walk argmax.  A node neither staged by this gang nor
+            # Plain-node argmax.  A node neither staged by this gang nor
             # holding key_w ("plain") scores exactly gsize - len(counts),
-            # so the best plain node is the min-(len(counts), idx) heap
-            # top.  Staged nodes are special for the rest of the gang and
-            # are popped for good; nodes holding key_w (same-(job,group)
+            # so the best plain node is the min-(len(counts), idx) over
+            # nodes with free >= need.  Staged nodes are special for the
+            # rest of the gang; nodes holding key_w (same-(job,group)
             # collisions) are scored exactly in the specials loop, and
             # their true score strictly dominates their plain rank, so a
-            # collision at the heap top can only lose to its own specials
-            # entry — skipping the peek is exact.  Per gang this is
-            # O(F + W·(log F + specials)) instead of O(W·F).
-            heap = walk_cache.get(need)
-            if heap is None:
-                heap = [(len(bc_get(n.name, empty)), i, n.name)
-                        for i, n in cluster.free_ge_items(need)]
-                heapq.heapify(heap)
-                walk_cache[need] = heap
+            # collision at the plain top can only lose to its own specials
+            # entry — skipping it is exact.  With a live ``score_index``
+            # the top is an O(polylog) query; without one, a per-gang heap
+            # over the feasible nodes (O(F + W·(log F + specials))).
             collide = bound.by_key.get(key_w, empty)
             for name in staged:
                 n = cluster.node(name)
@@ -278,14 +438,30 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
                         -cluster.node_index(name))
                 if best is None or rank > best_rank:
                     best, best_rank = n, rank
-            while heap and heap[0][2] in staged:
-                heapq.heappop(heap)          # staged: special from now on
-            if heap:
-                L, idx, name = heap[0]
-                if name not in collide:
-                    rank = (gsize - L, -idx)
-                    if best is None or rank > best_rank:
-                        best, best_rank = cluster.node(name), rank
+            if score_index is not None:
+                top = score_index.best_plain(need, staged_idx)
+                if top is not None:
+                    L, idx = top
+                    name = cluster.nodes[idx].name
+                    if name not in collide:
+                        rank = (gsize - L, -idx)
+                        if best is None or rank > best_rank:
+                            best, best_rank = cluster.nodes[idx], rank
+            else:
+                heap = walk_cache.get(need)
+                if heap is None:
+                    heap = [(len(bc_get(n.name, empty)), i, n.name)
+                            for i, n in cluster.free_ge_items(need)]
+                    heapq.heapify(heap)
+                    walk_cache[need] = heap
+                while heap and heap[0][2] in staged:
+                    heapq.heappop(heap)      # staged: special from now on
+                if heap:
+                    L, idx, name = heap[0]
+                    if name not in collide:
+                        rank = (gsize - L, -idx)
+                        if best is None or rank > best_rank:
+                            best, best_rank = cluster.node(name), rank
         else:
             if indexed:
                 candidates = cluster.free_ge_items(need)
@@ -304,6 +480,8 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
             return None                      # gang fails — do not commit
         w.node = best.name
         staged[best.name] = staged.get(best.name, 0) + need
+        if score_index is not None:
+            staged_idx.add(cluster.node_index(best.name))
         oc = staged_counts.setdefault(best.name, {})
         oc[key_w] = oc.get(key_w, 0) + 1
         placed.append(w)

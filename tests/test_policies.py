@@ -7,7 +7,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.cluster import Cluster, Node, hetero_cluster, paper_cluster
-from repro.core.controller import make_workers
+from repro.core.controller import WorkerSpec, make_workers
 from repro.core.planner import select_granularity
 from repro.core.policies import (DefaultPolicy, EasyBackfillPolicy,
                                  TaskGroupPolicy, make_policy)
@@ -76,6 +76,164 @@ def test_hetero_cluster_large_worker_placement():
     names = {n.name for _, n in c.iter_free_ge(256)}
     assert names == {n.name for n in c.nodes if n.n_slots == 256}
     assert c.max_free() == 256
+
+
+# ----------------------------------------------------------------------
+# order-statistic layer: count / select-k-th feasible node
+# ----------------------------------------------------------------------
+@given(seed=st.integers(0, 10_000), n_nodes=st.integers(1, 60))
+@settings(max_examples=60, deadline=None)
+def test_count_select_free_ge_match_naive(seed, n_nodes):
+    """``count_free_ge`` / ``select_free_ge`` must agree with a full scan
+    under arbitrary used/n_slots churn (including n_slots growth that
+    forces a structural reindex mid-stream)."""
+    rng = random.Random(seed)
+    nodes = [Node(f"n{i}", n_slots=rng.choice([1, 3, 4, 32, 100]))
+             for i in range(n_nodes)]
+    c = Cluster(nodes)
+    for _ in range(20):
+        nd = rng.choice(c.nodes)
+        if rng.random() < 0.6:
+            nd.used = rng.randrange(0, nd.n_slots + 1) if nd.n_slots else 0
+        else:
+            nd.n_slots = rng.choice([1, 4, 32, 100, 500])
+            nd.used = min(nd.used, nd.n_slots)
+        k = rng.randrange(1, 120)
+        naive = [i for i, n in enumerate(c.nodes) if n.free >= k]
+        assert c.count_free_ge(k) == len(naive)
+        for j in range(len(naive)):
+            assert c.select_free_ge(k, j) == naive[j]
+
+
+@given(seed=st.integers(0, 10_000), n_nodes=st.integers(1, 50))
+@settings(max_examples=60, deadline=None)
+def test_order_statistic_draw_matches_materialized_path(seed, n_nodes):
+    """The tentpole identity: ``DefaultPolicy._draw_indexed`` must be
+    draw-for-draw identical to materializing ``feasible_nodes(k, staged)``
+    and indexing it with the same keyed RNG — including the staged-overlay
+    rank corrections."""
+    rng = random.Random(seed)
+    nodes = [Node(f"n{i}", n_slots=rng.choice([2, 4, 8, 32]), n_domains=1)
+             for i in range(n_nodes)]
+    c = Cluster(nodes)
+    for n in c.nodes:
+        n.used = rng.randrange(0, n.n_slots + 1)
+    for trial in range(15):
+        nd = rng.choice(c.nodes)
+        nd.used = rng.randrange(0, nd.n_slots + 1)
+        k = rng.randrange(1, 10)
+        staged = {n.name: rng.randrange(0, 6)
+                  for n in rng.sample(c.nodes, min(3, len(c.nodes)))
+                  if rng.random() < 0.8}
+        key = rng.randrange(1 << 30)
+        feas = c.feasible_nodes(k, staged)
+        want = (feas[random.Random(key).randrange(len(feas))]
+                if feas else None)
+        got = DefaultPolicy._draw_indexed(c, k, staged, key)
+        assert got is want
+
+
+# ----------------------------------------------------------------------
+# persistent score index vs the rebuilt heap-walk argmax
+# ----------------------------------------------------------------------
+def _brute_best_plain(cluster, bound, need, staged_idx):
+    return min(((len(bound.counts.get(n.name, ())), i)
+                for i, n in enumerate(cluster.nodes)
+                if n.free >= need and i not in staged_idx),
+               default=None)
+
+
+def _rand_worker(rng, cluster):
+    w = WorkerSpec(job=f"j{rng.randrange(5)}", index=0, n_tasks=1,
+                   cpu=1.0, memory=1.0, uid=f"u{rng.randrange(8)}")
+    w.group = rng.randrange(3)
+    w.node = rng.choice(cluster.nodes).name
+    return w
+
+
+@given(seed=st.integers(0, 10_000), n_nodes=st.integers(1, 40))
+@settings(max_examples=60, deadline=None)
+def test_score_index_matches_rebuilt_argmax(seed, n_nodes):
+    """The live (busy-level, node-index) ordering must equal the per-gang
+    rebuilt argmax under random bind/unbind/capacity-change sequences,
+    with random staged exclusions."""
+    rng = random.Random(seed)
+    c = Cluster([Node(f"n{i}", n_slots=rng.choice([2, 4, 8, 32]),
+                      n_domains=1) for i in range(n_nodes)])
+    bound = TG.BoundIndex()
+    si = TG.ScoreIndex(c, bound)
+    added = []
+    for _ in range(50):
+        op = rng.random()
+        if op < 0.45 or not added:
+            w = _rand_worker(rng, c)
+            bound.add(w)
+            added.append(w)
+        elif op < 0.75:
+            bound.remove(added.pop(rng.randrange(len(added))))
+        elif op < 0.95:
+            nd = rng.choice(c.nodes)
+            nd.used = rng.randrange(0, nd.n_slots + 1)
+        else:                        # structural: node grows past the tree
+            nd = rng.choice(c.nodes)
+            nd.n_slots = rng.choice([4, 64, 600])
+            nd.used = min(nd.used, nd.n_slots)
+        need = rng.randrange(1, 7)
+        staged_idx = {rng.randrange(len(c.nodes))
+                      for _ in range(rng.randrange(3))}
+        assert si.best_plain(need, staged_idx) == \
+            _brute_best_plain(c, bound, need, staged_idx)
+
+
+def test_score_index_compaction_preserves_answers():
+    """A zero push budget forces the periodic O(N) compaction on every
+    flush — answers must be unaffected."""
+    rng = random.Random(7)
+    c = Cluster([Node(f"n{i}", n_slots=4, n_domains=1) for i in range(12)])
+    bound = TG.BoundIndex()
+    si = TG.ScoreIndex(c, bound)
+    si._push_budget = 0
+    added = []
+    for _ in range(60):
+        if rng.random() < 0.5 or not added:
+            w = _rand_worker(rng, c)
+            bound.add(w)
+            added.append(w)
+        else:
+            bound.remove(added.pop(rng.randrange(len(added))))
+        si._push_budget = 0          # on_rebuild resets it — re-pin
+        need = rng.randrange(1, 5)
+        assert si.best_plain(need, set()) == \
+            _brute_best_plain(c, bound, need, set())
+
+
+@given(seed=st.integers(0, 5000))
+@settings(max_examples=25, deadline=None)
+def test_schedule_job_with_score_index_matches_walk(seed):
+    """End-to-end binder identity: a gang sequence placed with the live
+    score index must bind worker-for-worker like the per-gang heap walk,
+    on twin clusters."""
+    rng = random.Random(seed)
+    mk = lambda: Cluster([Node(f"n{i}", n_slots=rng2.choice([4, 8]),
+                               n_domains=1) for i in range(12)])
+    rng2 = random.Random(seed + 1)
+    c_walk = mk()
+    rng2 = random.Random(seed + 1)
+    c_live = mk()
+    b_walk, b_live = TG.BoundIndex(), TG.BoundIndex()
+    si = TG.ScoreIndex(c_live, b_live)
+    for g in range(8):
+        job = Workload(f"g{g}", Profile.CPU, rng.randrange(2, 9), 100.0)
+        gran = select_granularity(job, c_walk, "granularity")
+        uid = f"g{g}#{g}"
+        w1 = make_workers(job, gran, uid=uid)
+        w2 = make_workers(job, gran, uid=uid)
+        p1 = TG.schedule_job(c_walk, w1, gran.n_groups, bound=b_walk)
+        p2 = TG.schedule_job(c_live, w2, gran.n_groups, bound=b_live,
+                             score_index=si)
+        assert (p1 is None) == (p2 is None)
+        if p1 is not None:
+            assert [w.node for w in p1] == [w.node for w in p2]
 
 
 # ----------------------------------------------------------------------

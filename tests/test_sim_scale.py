@@ -113,6 +113,19 @@ def test_heap_loop_matches_legacy_new_policies(scn, seed):
         lambda: Simulator(small_fleet(32), SCENARIOS[scn], seed=seed), subs)
 
 
+@pytest.mark.parametrize("scn", ["CM_G_TG", "FLEET", "FLEET_EASY"])
+def test_heap_loop_matches_legacy_with_forced_score_index(scn, monkeypatch):
+    """The task-group binder engages its live ScoreIndex only above a
+    fleet-size threshold (small fleets keep the per-gang walk).  Forcing
+    the threshold to zero must leave every trace identical — the index is
+    a constant-factor choice, not a semantic one."""
+    from repro.core.policies import TaskGroupPolicy
+    monkeypatch.setattr(TaskGroupPolicy, "_INDEX_MIN_NODES", 0)
+    subs = poisson_heavy_traffic(120, 128, seed=4, unique_names=False)
+    assert_equivalent(
+        lambda: Simulator(small_fleet(32), SCENARIOS[scn], seed=1), subs)
+
+
 def test_heap_loop_matches_legacy_easy_with_failures():
     fails = [(150.0, "h3", 200.0), (300.0, "h7", 100.0)]
 
@@ -233,6 +246,37 @@ def test_incremental_state_drains_clean():
     assert all(not ws for ws in sim.bound.workers.values())
     assert all(not c for c in sim.bound.counts.values())
     assert not sim.bound.by_key
+
+
+# ----------------------------------------------------------------------
+# per-phase perf counters: counts exact, timings loosely consistent
+# (ratios of the same clock — no absolute time budgets, nothing flaky)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("legacy", [False, True])
+def test_perf_counters_populated_and_consistent(legacy):
+    sim = Simulator(small_fleet(16), SCENARIOS["FLEET_EASY"], seed=0)
+    done = sim.run(poisson_heavy_traffic(80, 64, seed=1,
+                                         unique_names=False), legacy=legacy)
+    assert len(done) == 80                    # no deadlock break: admit
+    p = sim.perf                              # ran on every event
+    assert p["events"] == sim.n_events > 0
+    assert p["admit_calls"] == sim.n_events
+    assert p["place_attempts"] >= len(done)
+    assert p["reservations"] > 0
+    phases = p["heap_s"] + p["admit_s"] + p["refresh_s"]
+    assert 0.0 <= phases <= p["wall_s"] + 1e-6    # phases nest in the loop
+    assert phases >= 0.5 * p["wall_s"]            # ... and cover it
+    assert 0.0 <= p["reserve_s"] <= p["admit_s"] + 1e-9  # nested slice
+
+
+def test_benchmark_surfaces_perf_counters():
+    sim_scale = pytest.importorskip("benchmarks.sim_scale")
+    r = sim_scale.run_once(32, 60, seed=0, scenario="FLEET_EASY")
+    perf = r["perf"]
+    for key in ("heap_s", "admit_s", "refresh_s", "reserve_s",
+                "admit_calls", "place_attempts", "reservations"):
+        assert key in perf
+    assert perf["admit_calls"] == r["events"]
 
 
 # ----------------------------------------------------------------------
