@@ -1,0 +1,230 @@
+"""Multi-tenant queueing benchmark: disciplines on long-horizon diurnal load.
+
+Drives the long-horizon diurnal multi-tenant scenario (``FLEET_DIURNAL``
+workload: day/night Poisson arrivals, three tenant classes) through the
+pluggable queue disciplines and records, per discipline:
+
+* per-class mean response time (prod / svc / batch);
+* throughput (completed jobs per simulated hour) and makespan;
+* Jain's fairness index over weighted tenant slot-seconds
+  (``usage_i / weight_i`` — 1.0 = perfectly weighted-fair);
+* preemption overhead: gangs killed, wasted slot-seconds, and the wasted
+  fraction of all busy slot-seconds.
+
+The acceptance property (checked and recorded in the JSON): priority
+classes + gang preemption cut the high-class (prod) mean response time
+vs FIFO on the same trace without losing more than 5% total throughput.
+
+  python -m benchmarks.preempt [--smoke] [--seeds N] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.core.cluster import Cluster, Node
+from repro.core.scenarios import (FLEET_WORKLOADS, SCENARIOS, TENANT_CLASSES,
+                                  TENANT_WEIGHTS, diurnal_poisson)
+from repro.core.simulator import Simulator
+
+N_PERIODS = 3.0               # simulated "days" the arrival span covers
+BASE_UTILIZATION = 0.9        # trough ~0.36x, peak ~1.44x capacity
+AMPLITUDE = 0.6
+
+FULL = {"hosts": 64, "jobs": 2000, "seeds": 3}
+SMOKE = {"hosts": 32, "jobs": 300, "seeds": 1}
+
+PRIO_NAME = {p: t for t, p, _, _ in TENANT_CLASSES}   # class -> tenant label
+
+
+def fleet(n_hosts: int) -> Cluster:
+    return Cluster([Node(f"h{i}", n_slots=4, n_domains=1)
+                    for i in range(n_hosts)])
+
+
+def disciplines():
+    """The compared queue disciplines, all over the same placement stack
+    (task-group binding + EASY backfill reservations)."""
+    base = SCENARIOS["FLEET_DIURNAL"]
+    return [
+        ("fifo", dataclasses.replace(base, name="DIURNAL_FIFO",
+                                     queue="fifo", queue_cfg=None)),
+        ("priority", dataclasses.replace(
+            base, name="DIURNAL_PRIO",
+            queue_cfg={"preempt": False, "aging_tau": 1800.0})),
+        ("priority+preempt", base),
+        ("fairshare", dataclasses.replace(
+            base, name="DIURNAL_FAIR", queue="fairshare",
+            queue_cfg={"weights": TENANT_WEIGHTS})),
+    ]
+
+
+def _period_for(n_jobs: int, slots: int) -> float:
+    """Day length such that the expected arrival span covers N_PERIODS
+    diurnal cycles at the configured base utilization."""
+    mean_demand = sum(w.n_tasks * w.base_runtime
+                      for w in FLEET_WORKLOADS) / len(FLEET_WORKLOADS)
+    rate_base = BASE_UTILIZATION * slots / mean_demand
+    return (n_jobs / rate_base) / N_PERIODS
+
+
+def jain(values) -> float:
+    xs = [x for x in values if x > 0] or [1.0]
+    return sum(xs) ** 2 / (len(xs) * sum(x * x for x in xs))
+
+
+def run_once(n_hosts: int, n_jobs: int, seed: int, scenario) -> dict:
+    cluster = fleet(n_hosts)
+    period = _period_for(n_jobs, cluster.total_slots)
+    subs = diurnal_poisson(n_jobs, cluster.total_slots, seed=seed,
+                           period=period, base_utilization=BASE_UTILIZATION,
+                           amplitude=AMPLITUDE)
+    sim = Simulator(cluster, scenario, seed=seed)
+    # tenant slot-second accounting, discipline-agnostic: wrap the
+    # discipline's start/stop hooks (every discipline inherits them)
+    usage: dict = {}
+    since: dict = {}
+    disc = sim.discipline
+    orig_start, orig_stop = disc.on_start, disc.on_stop
+
+    def on_start(jr):
+        since[jr] = sim.now
+        orig_start(jr)
+
+    def on_stop(jr):
+        usage[jr.tenant] = usage.get(jr.tenant, 0.0) \
+            + (sim.now - since.pop(jr)) * jr.gran.n_tasks
+        orig_stop(jr)
+
+    disc.on_start, disc.on_stop = on_start, on_stop
+    t0 = time.perf_counter()
+    done = sim.run(subs)
+    wall = time.perf_counter() - t0
+    by_class: dict = {}
+    for jr in done:
+        by_class.setdefault(jr.priority, []).append(jr.response_time)
+    makespan = Simulator.makespan(done)
+    busy = sum(usage.values())
+    wasted = sim.perf["preempt_wasted_s"]
+    return {
+        "seed": seed,
+        "completed": len(done),
+        "unschedulable": len(sim.unschedulable),
+        "events": sim.n_events,
+        "wall_s": round(wall, 3),
+        "us_per_event": round(wall / max(sim.n_events, 1) * 1e6, 2),
+        "sim_makespan_s": round(makespan, 1),
+        "throughput_jobs_per_h": round(len(done) / makespan * 3600.0, 2),
+        "mean_response_s": {
+            PRIO_NAME.get(p, str(p)): round(sum(v) / len(v), 1)
+            for p, v in sorted(by_class.items(), reverse=True)},
+        "tenant_slot_seconds": {t: round(u, 1)
+                                for t, u in sorted(usage.items())},
+        "jain_weighted": round(jain(
+            [u / TENANT_WEIGHTS.get(t, 1.0)
+             for t, u in usage.items()]), 4),
+        "preemptions": sim.perf["preemptions"],
+        "preempt_wasted_slot_s": round(wasted, 1),
+        "preempt_wasted_frac": round(wasted / busy, 4) if busy else 0.0,
+    }
+
+
+def run(csv_rows=None, smoke: bool = False, seeds: int = None,
+        out_path: str = None):
+    cfg = SMOKE if smoke else FULL
+    n_seeds = seeds if seeds is not None else cfg["seeds"]
+    if out_path is None:
+        out_path = ("BENCH_preempt_smoke.json" if smoke
+                    else "BENCH_preempt.json")
+    print("\n== Queue disciplines on long-horizon diurnal load ==")
+    print(f"   {cfg['hosts']} hosts x 4 slots, {cfg['jobs']} jobs, "
+          f"{N_PERIODS:.0f} diurnal periods, {n_seeds} seed(s)")
+    results = []
+    summary = {}
+    for disc_name, scn in disciplines():
+        rows = [run_once(cfg["hosts"], cfg["jobs"], seed, scn)
+                for seed in range(n_seeds)]
+        for r in rows:
+            r["discipline"] = disc_name
+        results.extend(rows)
+        n = len(rows)
+        # classes can differ per row (a class with zero completions in
+        # one seed just drops out of that row's means)
+        classes = sorted({c for r in rows for c in r["mean_response_s"]})
+        summary[disc_name] = {
+            "mean_response_s": {
+                c: round(sum(r["mean_response_s"][c] for r in rows
+                             if c in r["mean_response_s"])
+                         / max(1, sum(1 for r in rows
+                                      if c in r["mean_response_s"])), 1)
+                for c in classes},
+            "throughput_jobs_per_h": round(
+                sum(r["throughput_jobs_per_h"] for r in rows) / n, 2),
+            "jain_weighted": round(
+                sum(r["jain_weighted"] for r in rows) / n, 4),
+            "preemptions": round(sum(r["preemptions"] for r in rows) / n, 1),
+            "preempt_wasted_frac": round(
+                sum(r["preempt_wasted_frac"] for r in rows) / n, 4),
+            "us_per_event": round(
+                sum(r["us_per_event"] for r in rows) / n, 1),
+        }
+        s = summary[disc_name]
+        resp = " ".join(f"{c}={v:7.1f}s"
+                        for c, v in s["mean_response_s"].items())
+        print(f"  {disc_name:17s} {resp}  thpt={s['throughput_jobs_per_h']:7.2f}/h "
+              f"jain={s['jain_weighted']:.3f} "
+              f"preempt={s['preemptions']:.0f} "
+              f"(waste {100 * s['preempt_wasted_frac']:.2f}%)")
+        if csv_rows is not None:
+            csv_rows.append((
+                f"preempt_{disc_name.replace('+', '_')}",
+                s["us_per_event"],
+                f"prod_resp={s['mean_response_s'].get('prod')};"
+                f"thpt={s['throughput_jobs_per_h']};"
+                f"jain={s['jain_weighted']}"))
+    # acceptance: preemption cuts prod response vs FIFO, <= 5% thpt loss
+    fifo, pp = summary["fifo"], summary["priority+preempt"]
+    prod_fifo = fifo["mean_response_s"].get("prod")
+    prod_pp = pp["mean_response_s"].get("prod")
+    acceptance = {
+        "prod_response_fifo_s": prod_fifo,
+        "prod_response_preempt_s": prod_pp,
+        "prod_response_reduced": (prod_fifo is not None
+                                  and prod_pp is not None
+                                  and prod_pp < prod_fifo),
+        "throughput_ratio": round(pp["throughput_jobs_per_h"]
+                                  / fifo["throughput_jobs_per_h"], 4),
+        "throughput_within_5pct": (pp["throughput_jobs_per_h"]
+                                   >= 0.95 * fifo["throughput_jobs_per_h"]),
+    }
+    ok = (acceptance["prod_response_reduced"]
+          and acceptance["throughput_within_5pct"])
+    print(f"  acceptance: prod {prod_fifo}s -> {prod_pp}s, "
+          f"throughput ratio {acceptance['throughput_ratio']:.3f} "
+          f"({'OK' if ok else 'FAIL'})")
+    payload = {"smoke": smoke, "config": {**cfg, "seeds": n_seeds,
+                                          "n_periods": N_PERIODS,
+                                          "base_utilization": BASE_UTILIZATION,
+                                          "amplitude": AMPLITUDE},
+               "results": results, "summary": summary,
+               "acceptance": acceptance}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep for CI smoke")
+    ap.add_argument("--seeds", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, seeds=args.seeds, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

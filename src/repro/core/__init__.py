@@ -1,14 +1,21 @@
-"""The paper's contribution: two-layer fine-grained scheduling.
+"""The paper's contribution, grown to a three-layer scheduling stack.
 
-**Application layer** — decides *what to ask for*, per job, from the job's
-own profile:
+**Application layer** — decides *what to ask for* and *who goes first*:
 
 * ``planner`` (Algorithm 1) — granularity selection: the roofline-derived
   profile (network / CPU / memory, ``profiles``) picks how many workers,
   nodes and groups a submission should request;
 * ``controller`` (Algorithm 2) — the MPI-aware task->worker mapping,
   per-worker resource requests and the hostfile; it also stamps the
-  per-submission JobId (``Workload.uid``) onto every worker of the gang.
+  per-submission JobId (``Workload.uid``) onto every worker of the gang;
+* ``queues`` — pluggable :class:`~repro.core.queues.QueueDiscipline`
+  objects owning the *order* of the pending queue and the preemption
+  decision: ``fifo`` (seed semantics, default), ``priority`` (classes +
+  aging + gang preemption: a blocked high-class head kills-and-requeues
+  the cheapest running gangs below its class), and ``fairshare``
+  (weighted multi-tenant deficit accounting over consumed slot-seconds).
+  ``Workload.tenant`` / ``Workload.priority`` are the identities they
+  read.
 
 **Infrastructure layer** — decides *where and when* those requests run,
 with no knowledge of why they were shaped that way:
@@ -17,24 +24,33 @@ with no knowledge of why they were shaped that way:
   objects owning admission + binding: the K8s ``default`` scheduler
   (random feasible placement), ``taskgroup`` (Algorithms 3+4 via
   ``taskgroup``: balanced groups, affinity/anti-affinity scoring), and
-  ``easy-backfill`` (head-of-queue reservations, beyond-paper);
+  ``easy-backfill`` (head-of-queue reservations over the *discipline's*
+  head, beyond-paper);
 * ``cluster`` — the node/slot/domain model with a Fenwick free-capacity
   index serving O(log C) feasibility queries on heterogeneous fleets,
-  plus per-value position Fenwick trees for order-statistic queries
-  (count / select the j-th feasible node in cluster order) so uniform
-  placement sampling never materializes the candidate list;
+  per-value position Fenwick trees for order-statistic queries (count /
+  select the j-th feasible node in cluster order), and per-node
+  ``mem_bw_tasks`` so heterogeneous fleets are *modeled* (bandwidth
+  saturation per host), not just schedulable;
 * gang admission and the progress-based event loop live in ``simulator``;
   admission cost is O(polylog N) per event: the task-group binder's
   argmax is a live ``taskgroup.ScoreIndex`` query maintained across
-  gangs, and EASY reservations are projected lazily from the engine's
-  finish heap (per-phase counters in ``Simulator.perf`` attribute the
-  remaining per-event cost).
+  gangs, its per-gang specials rescan is an incremental staged-score
+  overlay (O(W log W) per gang), and EASY reservations are projected
+  lazily from the engine's finish heap (per-phase counters in
+  ``Simulator.perf`` attribute the remaining per-event cost, including
+  preemption counts and wasted work).
 
-The layers meet only at the ``(Workload, Granularity, WorkerSpec)``
-hand-off, which is what makes them swappable: ``meshplan`` binds the same
-application-layer decisions to JAX meshes/sharding for real jobs, while
-``simulator``+``scenarios`` replay the paper's evaluation and the
-fleet-scale heavy-traffic scenarios against any registered policy.
+The stack composes freely — any queue discipline over any placement
+policy (``Scenario.queue`` x ``Scenario.placement``), dispatched without
+touching the event loop.  The layers meet only at the ``(Workload,
+Granularity, WorkerSpec)`` hand-off and the queue list, which is what
+makes them swappable: ``meshplan`` binds the same application-layer
+decisions to JAX meshes/sharding for real jobs, while
+``simulator``+``scenarios`` replay the paper's evaluation, the
+fleet-scale heavy-traffic scenarios and the long-horizon diurnal
+multi-tenant scenarios (``scenarios.diurnal_poisson``) against any
+registered discipline/policy pair.
 """
 from repro.core.cluster import (Cluster, Node, fleet_cluster, hetero_cluster,
                                 paper_cluster)
@@ -45,7 +61,10 @@ from repro.core.policies import (POLICIES, DefaultPolicy, EasyBackfillPolicy,
                                  make_policy)
 from repro.core.profiles import (PAPER_BENCHMARKS, Profile, Workload,
                                  classify_roofline)
-from repro.core.scenarios import SCENARIOS, get_scenario
+from repro.core.queues import (QUEUES, FairShareQueue, FifoQueue,
+                               PriorityQueue, QueueDiscipline, make_queue)
+from repro.core.scenarios import (SCENARIOS, TENANT_CLASSES, diurnal_poisson,
+                                  get_scenario, poisson_heavy_traffic)
 from repro.core.simulator import PerfParams, Scenario, Simulator
 from repro.core import taskgroup
 
@@ -54,6 +73,8 @@ __all__ = ["Cluster", "Node", "fleet_cluster", "hetero_cluster",
            "Granularity", "select_granularity", "POLICIES",
            "PlacementPolicy", "DefaultPolicy", "TaskGroupPolicy",
            "EasyBackfillPolicy", "make_policy", "PAPER_BENCHMARKS",
-           "Profile", "Workload", "classify_roofline", "SCENARIOS",
-           "get_scenario", "PerfParams", "Scenario", "Simulator",
-           "taskgroup"]
+           "Profile", "Workload", "classify_roofline", "QUEUES",
+           "QueueDiscipline", "FifoQueue", "PriorityQueue",
+           "FairShareQueue", "make_queue", "SCENARIOS", "TENANT_CLASSES",
+           "diurnal_poisson", "get_scenario", "poisson_heavy_traffic",
+           "PerfParams", "Scenario", "Simulator", "taskgroup"]

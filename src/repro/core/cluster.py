@@ -47,6 +47,12 @@ class Node:
     pod: int = 0                 # DCN domain (fleet); 0 = single pod
     used: int = 0
     domain_used: list = None     # cores pinned per domain (affinity mode)
+    # per-node memory bandwidth: mem-profile tasks this node sustains at
+    # full speed.  None = the scenario's homogeneous ``PerfParams
+    # .mem_bw_tasks`` value; heterogeneous fleets set it per host so the
+    # speed model saturates low-bandwidth nodes earlier (the Fenwick index
+    # made such fleets *schedulable*; this makes them *modeled*)
+    mem_bw_tasks: Optional[float] = None
 
     def __post_init__(self):
         if self.domain_used is None:
@@ -368,15 +374,21 @@ def fleet_cluster(n_pods: int = 2, hosts_per_pod: int = 64,
     return Cluster(nodes, intra_bw=1.0, inter_bw=0.6, cross_pod_bw=0.05)
 
 
-def hetero_cluster(groups: Sequence[Tuple[int, int]] = ((48, 4), (12, 32),
-                                                        (4, 256))) -> Cluster:
-    """Heterogeneous fleet: ``groups`` is ``[(n_hosts, slots_per_host)]`` —
-    small accelerator hosts mixed with large-slot superpod nodes, the shape
-    the Fenwick capacity index exists for."""
+def hetero_cluster(groups: Sequence[tuple] = ((48, 4), (12, 32),
+                                              (4, 256))) -> Cluster:
+    """Heterogeneous fleet: ``groups`` is ``[(n_hosts, slots_per_host)]``
+    or ``[(n_hosts, slots_per_host, mem_bw_tasks)]`` — small accelerator
+    hosts mixed with large-slot superpod nodes, the shape the Fenwick
+    capacity index exists for.  The optional third element gives each
+    group its own memory bandwidth (tasks at full speed), so the speed
+    model treats the groups differently too."""
     nodes = []
     i = 0
-    for count, slots in groups:
+    for group in groups:
+        count, slots = group[0], group[1]
+        bw = group[2] if len(group) > 2 else None
         for _ in range(count):
-            nodes.append(Node(f"h{i}", n_slots=slots, n_domains=1))
+            nodes.append(Node(f"h{i}", n_slots=slots, n_domains=1,
+                              mem_bw_tasks=bw))
             i += 1
     return Cluster(nodes)

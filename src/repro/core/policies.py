@@ -2,11 +2,17 @@
 
 The simulator's admission path is a :class:`PlacementPolicy` object instead
 of scenario-flag branches, so scheduling behaviours compose and new policies
-(priorities, preemption, multi-queue) drop in without touching the event
-loop.  A policy owns two decisions:
+drop in without touching the event loop.  A policy owns two decisions:
 
 * **place** — bind one gang's workers to nodes (or refuse atomically);
 * **admit** — which queued gangs to attempt after an event, in what order.
+
+*Queue order is not a policy decision*: the application-layer
+:class:`~repro.core.queues.QueueDiscipline` re-establishes its ordering of
+``sim.queue`` before every admission pass (FIFO / priority-with-aging /
+weighted fair share), so "the head of the queue" — including the head the
+EASY reservation protects — is always the *discipline's* head.  Policies
+only decide whether and where the gangs they are handed can start.
 
 Three policies ship here:
 

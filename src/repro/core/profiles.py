@@ -49,6 +49,13 @@ class Workload:
     (generating one if unset), so concurrent same-name jobs never alias in
     Algorithm 4 scoring; the seed-compatible ``job_ids="name"`` mode keys
     on ``name`` and ignores it.
+
+    ``tenant`` and ``priority`` are the multi-tenant queueing identities
+    (the K8s namespace and PriorityClass): the queue disciplines in
+    ``repro.core.queues`` read them for fair-share deficit accounting and
+    priority ordering / gang preemption.  The defaults put every job in
+    one tenant at class 0 — indistinguishable from the pre-queueing
+    behaviour under any discipline's tie-breaks.
     """
     name: str
     profile: Profile
@@ -56,6 +63,8 @@ class Workload:
     base_runtime: float     # seconds, best-case standalone fine-grained run
     arch: Optional[str] = None   # assigned architecture id, if arch-derived
     uid: Optional[str] = None    # per-submission identity (K8s job UID)
+    tenant: str = "default"      # namespace for fair-share accounting
+    priority: int = 0            # priority class (higher = sooner)
 
 
 # --- the paper's five benchmarks (HPCC + MiniFE), 16 MPI processes each ----

@@ -1,0 +1,344 @@
+"""Application-layer queueing disciplines: multi-tenant ordering + preemption.
+
+The third layer of the scheduling stack.  A :class:`QueueDiscipline` sits
+*between* ``Simulator.submit`` and the infrastructure-layer
+:class:`~repro.core.policies.PlacementPolicy`: it owns the **order** of
+``Simulator.queue`` (which gang is the head the placement policy protects,
+who may overtake whom) and the **preemption** decision (which running gangs
+to kill when a high-priority gang cannot be placed), while the placement
+policy keeps owning *where* a gang's workers land.  The two layers meet
+only at the queue list and the simulator's start/stop bookkeeping, which is
+what lets any discipline compose with any placement policy (FIFO + EASY,
+priority + task-group, fair-share + default, ...).
+
+Three disciplines ship here:
+
+``fifo``
+    Today's behaviour, bit-for-bit: submissions append, failure requeues
+    resume at the head, nothing is reordered and nothing is preempted.
+    The default for every pre-existing scenario (trace-identical).
+
+``priority``
+    Per-job priority classes (``Workload.priority``, higher = sooner) with
+    *aging*: a job's effective priority is ``priority + age/aging_tau``, so
+    a starved low-class gang eventually outranks fresh high-class arrivals
+    (no starvation).  Ordering is a stable sort — FIFO within a class.
+    With ``preempt`` enabled the discipline also implements **gang
+    preemption**: when a high-class head cannot be placed, the cheapest
+    set of running gangs strictly below its class is killed-and-requeued
+    (checkpoint-quantized, like node-failure teardown) until the head's
+    gang *can* fit.
+
+``fairshare``
+    Weighted multi-tenant deficit accounting: every tenant accrues
+    consumed slot-seconds (maintained incrementally, like the simulator's
+    live mem-load), and queued gangs are ordered by their tenant's
+    *virtual time* ``usage / weight`` ascending — the most underserved
+    tenant's jobs go first, FIFO within a tenant.
+
+Preemption mechanics (``priority`` with ``preempt=True``): the
+*beneficiary* is the first queued gang in discipline order whose **raw**
+class clears ``preempt_min_prio`` (aging may promote an old low-class
+gang to the literal head — that must not disable preemption for the
+high-class gangs behind it).  Victims are running gangs strictly below
+the beneficiary's class, ordered by *cost* — the slot-second-weighted
+work that would be wasted if killed now (work since the last
+checkpoint), ties broken newest-``_run_seq``-first (least sunk work,
+deterministic).  The cheapest prefix whose projected freed capacity
+satisfies the gang's necessary conditions (total demand vs free slots,
+widest worker vs best node) is killed via the simulator's ``_on_stop``
+teardown and requeued resuming from its last checkpoint; counts and
+wasted work are recorded on the victim (``JobRun.preemptions`` /
+``JobRun.wasted_work``) and in ``Simulator.perf`` (``preemptions`` /
+``preempt_wasted_s``).  A kill restarts the victim's aging clock
+(``JobRun._queued_t``), so it cannot out-age the gang it was killed for
+and snatch its own capacity back; a per-event killed set guarantees no
+gang is killed twice in one admission event (a backfill pass may restart
+a victim immediately — without the guard, kill/restart/kill would
+livelock), which also bounds the preempt/admit rounds per event.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+
+def make_queue(sim) -> "QueueDiscipline":
+    """Resolve a simulator's scenario to a queue-discipline instance.
+    ``scenario.queue`` names it (``None`` -> ``fifo``); ``scenario
+    .queue_cfg`` carries discipline parameters (aging_tau, preempt,
+    weights, ...)."""
+    name = sim.sc.queue or "fifo"
+    try:
+        cls = QUEUES[name]
+    except KeyError:
+        raise ValueError(f"unknown queue discipline {name!r}; "
+                         f"known: {sorted(QUEUES)}") from None
+    return cls(sim, sim.sc.queue_cfg or {})
+
+
+class QueueDiscipline:
+    """Queue ordering + preemption strategy for one simulator instance.
+
+    The base class *is* the FIFO discipline: append on submit, resume at
+    the head on requeue, never reorder, never preempt — the seed's exact
+    semantics, so every hook here is a behavioural no-op.
+    """
+
+    name = "fifo"
+
+    def __init__(self, sim, cfg: Optional[Dict] = None):
+        self.sim = sim
+        self.cfg = cfg or {}
+
+    # -- queue membership --------------------------------------------------
+    def on_submit(self, jr):
+        """A fresh submission enters the queue (tail, FIFO)."""
+        self.sim.queue.append(jr)
+
+    def on_requeue(self, jr):
+        """A killed gang (node failure or preemption) re-enters the queue;
+        FIFO resumes it with priority at the head (seed semantics).  The
+        aging clock restarts: a preempted gang must not use its pre-kill
+        queue age to out-rank the gang it was just killed for and snatch
+        its own freed capacity back."""
+        jr._queued_t = self.sim.now
+        self.sim.queue.insert(0, jr)
+
+    # -- ordering ----------------------------------------------------------
+    def reorder(self):
+        """Re-establish the discipline's queue order before an admission
+        pass.  FIFO: the list order *is* the discipline order."""
+
+    # -- usage accounting hooks (fair-share deficits; base: no-ops) --------
+    def on_start(self, jr):
+        pass
+
+    def on_stop(self, jr):
+        pass
+
+    # -- preemption --------------------------------------------------------
+    def maybe_preempt(self, dirty_nodes: Optional[set],
+                      use_index: bool = True,
+                      killed: Optional[set] = None) -> bool:
+        """Called after an admission pass left the head blocked.  Return
+        True iff at least one running gang was killed (the simulator then
+        reorders + re-runs admission).  ``killed`` accumulates the gangs
+        preempted during this admission event: a gang killed once is
+        never re-killed in the same event (a backfill pass may restart a
+        victim immediately — without the guard, kill/restart/kill would
+        livelock).  FIFO never preempts."""
+        return False
+
+    # -- shared teardown ---------------------------------------------------
+    def _preempt_gang(self, jr, dirty_nodes: Optional[set]):
+        """Kill one running gang and requeue it, resuming from its last
+        checkpoint — the node-failure teardown (``Simulator._fail_node``)
+        minus the node going down, with the wasted work recorded."""
+        sim = self.sim
+        sim._sync(jr)
+        sim._on_stop(jr, dirty_nodes)
+        done_work = jr.job.base_runtime - jr.remaining
+        saved = sim._ckpt_saved(done_work)
+        wasted = done_work - saved
+        jr.remaining = jr.job.base_runtime - saved
+        jr.workers = []
+        jr.preemptions += 1
+        jr.wasted_work += wasted
+        sim.perf["preemptions"] += 1
+        sim.perf["preempt_wasted_s"] += wasted * jr.gran.n_tasks
+        self.on_requeue(jr)
+        sim.policy.on_enqueue(jr)
+
+
+class FifoQueue(QueueDiscipline):
+    """Explicit name for the base discipline (today's behaviour)."""
+
+    name = "fifo"
+
+
+class PriorityQueue(QueueDiscipline):
+    """Priority classes with aging, optionally gang preemption.
+
+    cfg keys: ``aging_tau`` (seconds of queue age worth one priority
+    class; default 600, ``0``/``inf`` disables aging), ``preempt`` (bool,
+    default False), ``preempt_min_prio`` (heads below this class never
+    preempt; default 1), ``preempt_below`` (victims must be strictly
+    below this class *and* the head's; default None = head's class
+    alone), ``preempt_delay`` (seconds the head must have queued before
+    it may kill — lets natural completions resolve transient deficits;
+    default 0).
+    """
+
+    name = "priority"
+
+    def __init__(self, sim, cfg: Optional[Dict] = None):
+        super().__init__(sim, cfg)
+        self.aging_tau = float(self.cfg.get("aging_tau", 600.0))
+        self.preempt = bool(self.cfg.get("preempt", False))
+        self.preempt_min_prio = int(self.cfg.get("preempt_min_prio", 1))
+        below = self.cfg.get("preempt_below")
+        self.preempt_below = None if below is None else int(below)
+        self.preempt_delay = float(self.cfg.get("preempt_delay", 0.0))
+
+    def effective_priority(self, jr, now: float) -> float:
+        """Class plus queue age (since *last enqueue* — preemption resets
+        the clock) in units of ``aging_tau``."""
+        if self.aging_tau > 0 and self.aging_tau != float("inf"):
+            return jr.priority + (now - jr._queued_t) / self.aging_tau
+        return float(jr.priority)
+
+    def reorder(self):
+        q = self.sim.queue
+        if len(q) > 1:
+            now = self.sim.now
+            # stable: FIFO within equal effective priority
+            q.sort(key=lambda jr: -self.effective_priority(jr, now))
+
+    def maybe_preempt(self, dirty_nodes: Optional[set],
+                      use_index: bool = True,
+                      killed: Optional[set] = None) -> bool:
+        sim = self.sim
+        if not self.preempt or not sim.queue:
+            return False
+        # beneficiary: the first queued gang (in discipline order) whose
+        # *raw* class may preempt.  Under aging the literal queue head can
+        # be an old low-class gang promoted by its effective priority —
+        # that must not disable preemption for the high-class gangs
+        # queued right behind it (the freed capacity still goes to the
+        # queue in discipline order, so the aged head drains first).
+        head = None
+        for jr in sim.queue:
+            if jr.priority >= self.preempt_min_prio:
+                head = jr
+                break
+        if head is None:
+            return False
+        if sim.now - head._queued_t < self.preempt_delay:
+            return False
+        # preempt only on a genuine capacity deficit: when the
+        # beneficiary's necessary conditions already hold (it is blocked
+        # on binder fragmentation, an EASY shadow-time reservation, or
+        # simply queued behind the discipline's head), killing low-class
+        # gangs cannot be shown to help — don't.
+        cluster = sim.cluster
+        need_total = head.gran.n_tasks
+        need_worker = head.gran.tasks_per_worker
+        free_total = cluster.free_slots
+        cur_max = cluster.max_free()
+        if free_total >= need_total and cur_max >= need_worker:
+            return False
+        cutoff = head.priority if self.preempt_below is None \
+            else min(head.priority, self.preempt_below)
+        victims = [jr for jr in sim.running
+                   if jr.priority < cutoff
+                   and (killed is None or jr not in killed)]
+        if not victims:
+            return False
+        # cheapest-first: wasted slot-seconds if killed now (work since the
+        # last checkpoint x gang width); ties newest-admission-first
+        # (least sunk work) via the _run_seq stamp — deterministic.
+        ck = sim.sc.ckpt_interval
+
+        def cost(jr):
+            done = jr.job.base_runtime \
+                - (jr.remaining - (sim.now - jr._synced_t) * jr.speed)
+            saved = (done // ck) * ck if ck > 0 else 0.0
+            return (done - saved) * jr.gran.n_tasks
+
+        victims.sort(key=lambda jr: (cost(jr), -jr._run_seq))
+        # plan the cheapest prefix whose projected freed capacity satisfies
+        # the head's necessary conditions (no gang is killed if even
+        # killing everyone below the class could not make the gang fit)
+        freed: Dict[str, int] = {}
+        plan = []
+        satisfied = False
+        for jr in victims:
+            plan.append(jr)
+            free_total += jr.gran.n_tasks
+            for node, tasks in jr.nodes_used.items():
+                f = freed.get(node)
+                if f is None:
+                    f = cluster.node(node).free
+                f += tasks
+                freed[node] = f
+                if f > cur_max:
+                    cur_max = f
+            if free_total >= need_total and cur_max >= need_worker:
+                satisfied = True
+                break
+        if not satisfied:
+            return False
+        for jr in plan:
+            self._preempt_gang(jr, dirty_nodes)
+            if killed is not None:
+                killed.add(jr)
+        return True
+
+
+class FairShareQueue(QueueDiscipline):
+    """Weighted fair share over consumed slot-seconds (deficit ordering).
+
+    cfg keys: ``weights`` — ``{tenant: weight}`` (default 1.0 each).
+    Tenant usage accrues incrementally (per-tenant running slot counts
+    advanced lazily, like the simulator's live mem-load): ``reorder`` is
+    O(tenants + Q log Q) per admission event, not O(running jobs).
+    """
+
+    name = "fairshare"
+
+    def __init__(self, sim, cfg: Optional[Dict] = None):
+        super().__init__(sim, cfg)
+        self.weights: Dict[str, float] = dict(self.cfg.get("weights", {}))
+        self._usage: Dict[str, float] = {}      # tenant -> slot-seconds
+        self._run_slots: Dict[str, int] = {}    # tenant -> running slots
+        self._last_t = 0.0
+
+    def weight(self, tenant: str) -> float:
+        return self.weights.get(tenant, 1.0)
+
+    def _advance(self):
+        now = self.sim.now
+        dt = now - self._last_t
+        if dt > 0:
+            usage = self._usage
+            for tenant, slots in self._run_slots.items():
+                if slots:
+                    usage[tenant] = usage.get(tenant, 0.0) + slots * dt
+        self._last_t = now
+
+    def on_start(self, jr):
+        self._advance()
+        self._run_slots[jr.tenant] = \
+            self._run_slots.get(jr.tenant, 0) + jr.gran.n_tasks
+
+    def on_stop(self, jr):
+        self._advance()
+        self._run_slots[jr.tenant] -= jr.gran.n_tasks
+
+    def tenant_usage(self) -> Dict[str, float]:
+        """Consumed slot-seconds per tenant, up to ``sim.now`` — the
+        discipline's own accounting, exposed for fairness metrics and
+        asserted against per-job slot-seconds in ``tests/test_queues``.
+        (``benchmarks/preempt.py`` measures usage via the start/stop
+        hooks instead, so it can report Jain's index for *every*
+        discipline, not just fair-share.)"""
+        self._advance()
+        return dict(self._usage)
+
+    def vtime(self, tenant: str) -> float:
+        return self._usage.get(tenant, 0.0) / self.weight(tenant)
+
+    def reorder(self):
+        q = self.sim.queue
+        if len(q) > 1:
+            self._advance()
+            # stable: FIFO within a tenant (and across tenants at equal
+            # virtual time — e.g. everyone at zero usage)
+            q.sort(key=lambda jr: self.vtime(jr.tenant))
+
+
+QUEUES = {
+    "fifo": FifoQueue,
+    "priority": PriorityQueue,
+    "fairshare": FairShareQueue,
+}

@@ -61,6 +61,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core import policies as POL
+from repro.core import queues as QD
 from repro.core.cluster import Cluster
 from repro.core.controller import WorkerSpec
 from repro.core.planner import Granularity, select_granularity
@@ -116,6 +117,12 @@ class Scenario:
     # the calibrated-paper-scenario default); "uid" = per-submission JobIds
     # end-to-end + keyed RNG draws + O(1) gang pre-rejects everywhere
     job_ids: str = "name"
+    # queue-discipline name ("fifo" | "priority" | "fairshare"); None ->
+    # "fifo" (today's behaviour, trace-identical).  ``queue_cfg`` carries
+    # discipline parameters: aging_tau / preempt / preempt_min_prio for
+    # "priority", weights for "fairshare" (see repro.core.queues)
+    queue: Optional[str] = None
+    queue_cfg: Optional[Dict] = None
 
 
 @dataclasses.dataclass(eq=False)         # identity hash: JobRuns live in the
@@ -124,12 +131,19 @@ class JobRun:                            # per-node running-jobs index
     gran: Granularity
     submit_t: float
     uid: str = ""                        # per-submission gang identity
+    tenant: str = "default"              # fair-share accounting identity
+    priority: int = 0                    # priority class (higher = sooner)
     workers: List[WorkerSpec] = dataclasses.field(default_factory=list)
     start_t: Optional[float] = None
     finish_t: Optional[float] = None
     remaining: float = 0.0
     speed: float = 1.0
+    preemptions: int = 0                 # times killed by gang preemption
+    wasted_work: float = 0.0             # work-seconds lost to preemptions
     # engine-internal state (lazy progress sync + heap-entry invalidation)
+    _queued_t: float = dataclasses.field(default=0.0, repr=False)
+    # ^ last enqueue time (submit or kill-requeue): the aging clock —
+    #   a preempted gang must not out-age the gang it was killed for
     _synced_t: float = dataclasses.field(default=0.0, repr=False)
     _ver: int = dataclasses.field(default=0, repr=False)
     _seq: int = dataclasses.field(default=0, repr=False)
@@ -213,9 +227,20 @@ class Simulator:
         # deadlock break (its final scan holds no admission pass)
         self.perf: Dict[str, float] = {
             "events": 0, "admit_calls": 0, "place_attempts": 0,
-            "reservations": 0, "heap_s": 0.0, "admit_s": 0.0,
+            "reservations": 0, "preemptions": 0, "preempt_wasted_s": 0.0,
+            "heap_s": 0.0, "admit_s": 0.0,
             "refresh_s": 0.0, "reserve_s": 0.0, "wall_s": 0.0}
+        # per-node memory bandwidth: None when the fleet is homogeneous
+        # (the scalar PerfParams path — zero per-event overhead); else a
+        # name -> tasks-at-full-speed map defaulting to the scenario value
+        pbw = scenario.perf.mem_bw_tasks
+        self._node_bw: Optional[Dict[str, float]] = None
+        if any(n.mem_bw_tasks is not None for n in cluster.nodes):
+            self._node_bw = {n.name: (pbw if n.mem_bw_tasks is None
+                                      else n.mem_bw_tasks)
+                             for n in cluster.nodes}
         self.policy = POL.make_policy(self)    # infrastructure-layer policy
+        self.discipline = QD.make_queue(self)  # application-layer queue
 
     # ---------------- submission -----------------------------------------
     def submit(self, job: Workload, t: float):
@@ -237,17 +262,32 @@ class Simulator:
             jr.uid = job.uid or f"{job.name}#{jr._seq}"
         else:
             jr.uid = job.name
-        self.queue.append(jr)
+        jr.tenant = job.tenant
+        jr.priority = job.priority
+        jr._queued_t = t
+        self.discipline.on_submit(jr)
         self.policy.on_enqueue(jr)
 
-    # ---------------- admission (policy dispatch) --------------------------
+    # ---------------- admission (discipline + policy dispatch) -------------
     def _try_admit(self, dirty_nodes: Optional[set] = None,
                    use_index: bool = True):
-        """Admission is delegated to the scenario's placement policy (see
-        ``repro.core.policies``): FIFO/skip-ahead with default or task-group
-        binding, or EASY backfill with a head-of-queue reservation."""
+        """Admission composes the two pluggable layers: the queue
+        discipline (``repro.core.queues``) re-establishes its ordering of
+        ``self.queue`` (FIFO: no-op), then the placement policy
+        (``repro.core.policies``) runs its admission pass — FIFO/skip-ahead
+        with default or task-group binding, or EASY backfill with a
+        head-of-queue reservation over the *discipline's* head.  If the
+        head is left blocked, the discipline may preempt running gangs
+        (kill-and-requeue below the head's priority class) and admission
+        re-runs — each round kills at least one gang, so the loop
+        terminates."""
         self.perf["admit_calls"] += 1
+        self.discipline.reorder()
         self.policy.admit(dirty_nodes, use_index)
+        killed: set = set()       # one kill per gang per event (no livelock)
+        while self.discipline.maybe_preempt(dirty_nodes, use_index, killed):
+            self.discipline.reorder()
+            self.policy.admit(dirty_nodes, use_index)
 
     # ---------------- incremental cluster-state bookkeeping ----------------
     def _on_start(self, jr: JobRun, dirty_nodes: Optional[set]):
@@ -271,6 +311,7 @@ class Simulator:
         jr._synced_t = self.now
         jr._ver += 1              # any old heap entry is stale
         jr._pushed = False
+        self.discipline.on_start(jr)
         if dirty_nodes is not None:
             dirty_nodes.update(nodes)
 
@@ -300,6 +341,7 @@ class Simulator:
         jr._ver += 1              # invalidate this job's heap entry
         jr._pushed = False
         jr._nodes = None
+        self.discipline.on_stop(jr)
         if dirty_nodes is not None:
             dirty_nodes.update(nodes)
 
@@ -393,12 +435,15 @@ class Simulator:
             fc = _cpu_factor(p, self.sc.affinity, tpw)
             f *= fc if prof == Profile.CPU else fc ** 0.5
         if prof in (Profile.MEMORY, Profile.MIXED):
-            # synchronous job: bandwidth saturation on its hottest node
+            # synchronous job: bandwidth saturation on its hottest node;
+            # heterogeneous fleets read the per-node bandwidth map
             sat = 1.0
+            nbw = self._node_bw
             for node in jr.nodes_used:
                 ld = mem_load.get(node, 0.0)
+                bw = p.mem_bw_tasks if nbw is None else nbw[node]
                 sat = max(sat,
-                          max(1.0, ld / p.mem_bw_tasks) ** p.mem_sat_exp)
+                          max(1.0, ld / bw) ** p.mem_sat_exp)
             fm = _mem_gran_factor(p, self.sc.affinity, tpw) * sat
             f *= fm if prof == Profile.MEMORY else fm ** 0.5
         if prof == Profile.NETWORK:
@@ -598,6 +643,13 @@ class Simulator:
         perf["events"] = self.n_events
         return self.done
 
+    def _ckpt_saved(self, done_work: float) -> float:
+        """Work a killed gang resumes with: progress quantized down to the
+        scenario's checkpoint interval (the single source of truth for
+        node-failure teardown, preemption teardown and victim costing)."""
+        ck = self.sc.ckpt_interval
+        return (done_work // ck) * ck if ck > 0 else 0.0
+
     # ---------------- fault handling ---------------------------------------
     def _fail_node(self, node_name: str, down_for: float, fails,
                    dirty_nodes: Optional[set]):
@@ -626,11 +678,9 @@ class Simulator:
             self._sync(jr)
             self._on_stop(jr, dirty_nodes)
             done_work = jr.job.base_runtime - jr.remaining
-            ck = self.sc.ckpt_interval
-            saved = (done_work // ck) * ck if ck > 0 else 0.0
-            jr.remaining = jr.job.base_runtime - saved
+            jr.remaining = jr.job.base_runtime - self._ckpt_saved(done_work)
             jr.workers = []
-            self.queue.insert(0, jr)            # resumes with priority
+            self.discipline.on_requeue(jr)      # FIFO: resumes at the head
             self.policy.on_enqueue(jr)
         self.preempted = getattr(self, "preempted", 0) + len(victims)
         # take the node down; schedule its recovery as a pseudo-failure

@@ -258,6 +258,120 @@ class ScoreIndex:
         return None
 
 
+class _StagedOverlay:
+    """Incremental specials index over one gang's staged nodes.
+
+    ``schedule_job`` used to rescan every staged node per worker
+    (``full_score`` over the staged dict): O(W) staged nodes x O(W)
+    workers = O(W²) per gang, fleet-size independent but measurable at
+    W=32.  The overlay makes the rescan incremental by decomposing a
+    staged node's Algorithm-4 score for a worker with gang key ``k``::
+
+        score(n, k) = gsize + A(n) + corr(n, k)
+        A(n)  = -(len(base_n) + |overlay keys on n not in base_n|)
+        corr(n, k) >= 0, nonzero only where k is in base_n or overlay_n
+
+    ``A(n)`` is key-independent and only ever *decreases* (staging can
+    only add new keys), so a max-heap over ``(A, -idx)`` with lazy
+    invalidation serves the best *plain* staged candidate as a peek; the
+    few correction nodes (same-key staged, collisions) are scored exactly
+    in O(1) via the maintained ``new_keys`` counts.  A gang decision is
+    O(W log W) amortized: each placement pushes at most one refreshed
+    heap entry, each query pops stale/dead entries at most once each.
+
+    For correction nodes the heap's ``gsize + A`` is an *underestimate*
+    of their true score (``corr >= 0``); callers also score those nodes
+    exactly, so taking the max over both candidate sets is exact — the
+    heap never needs to skip them.
+
+    The pre-overlay full rescan is kept in ``schedule_job``
+    (``incremental_specials=False``) as the twin-run oracle for tests.
+    """
+
+    __slots__ = ("cluster", "base", "cap", "counts", "new_keys", "by_key",
+                 "heap", "A", "min_need")
+
+    def __init__(self, cluster: Cluster, base_counts: Dict[str, Dict],
+                 min_need: int):
+        self.cluster = cluster
+        self.base = base_counts
+        self.cap: Dict[str, int] = {}        # name -> staged slot demand
+        self.counts: Dict[str, Dict] = {}    # name -> {gang_key: n}
+        self.new_keys: Dict[str, int] = {}   # name -> |overlay \ base| keys
+        self.by_key: Dict[tuple, set] = {}   # gang_key -> staged names
+        self.heap: List[tuple] = []          # (-A, idx, name, A) lazy
+        self.A: Dict[str, int] = {}          # name -> live A value
+        self.min_need = min_need             # smallest worker of the gang
+
+    def stage(self, name: str, idx: int, key_w: tuple, need: int):
+        self.cap[name] = self.cap.get(name, 0) + need
+        oc = self.counts.get(name)
+        first = oc is None
+        if first:
+            oc = self.counts[name] = {}
+        n0 = oc.get(key_w, 0)
+        oc[key_w] = n0 + 1
+        self.by_key.setdefault(key_w, set()).add(name)
+        newly = n0 == 0 and key_w not in self.base.get(name, _EMPTY)
+        if newly:
+            self.new_keys[name] = self.new_keys.get(name, 0) + 1
+        if first or newly:                    # A changed: refresh the heap
+            a = -(len(self.base.get(name, _EMPTY))
+                  + self.new_keys.get(name, 0))
+            self.A[name] = a
+            heapq.heappush(self.heap, (-a, idx, name, a))
+
+    def exact_score(self, name: str, key_w: tuple, gsize: int) -> float:
+        """Algorithm-4 score with the staged overlay merged in — equal to
+        ``full_score`` in ``schedule_job``, in O(1) via ``new_keys``."""
+        base = self.base.get(name, _EMPTY)
+        in_base = key_w in base
+        score = base.get(key_w, 0) + gsize \
+            - (len(base) - (1 if in_base else 0))
+        over = self.counts.get(name)
+        if over:
+            own = over.get(key_w, 0)
+            score += own - (self.new_keys.get(name, 0)
+                            - (1 if own and not in_base else 0))
+        return score
+
+    def best_staged(self, need: int):
+        """Top staged node by ``(A, -idx)`` with ``free - staged >= need``,
+        or None.  Stale entries (A moved on) and dead nodes (too full for
+        even the gang's smallest worker — monotone within a gang) are
+        dropped permanently; entries infeasible only for *this* worker's
+        size are restored after the query."""
+        heap = self.heap
+        node = self.cluster.node
+        restore = None
+        top = None
+        while heap:
+            nega, idx, name, a = heap[0]
+            if self.A.get(name) != a:
+                heapq.heappop(heap)           # stale: A decreased since
+                continue
+            n = node(name)
+            fc = n.n_slots - n.used - self.cap[name]
+            if fc < need:
+                heapq.heappop(heap)
+                if fc < self.min_need:        # dead for the whole gang
+                    del self.A[name]          # (later entries pop as stale)
+                else:
+                    if restore is None:
+                        restore = []
+                    restore.append((nega, idx, name, a))
+                continue
+            top = (a, idx, name)
+            break
+        if restore:
+            for e in restore:
+                heapq.heappush(heap, e)
+        return top
+
+
+_EMPTY: Dict = {}
+
+
 def build_groups(n_groups: int, workers: Sequence[WorkerSpec]) -> List[Group]:
     """Algorithm 3, step 1: balanced group construction.
 
@@ -336,6 +450,7 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
                  use_index: bool = True,
                  plan=None,
                  score_index: Optional[ScoreIndex] = None,
+                 incremental_specials: bool = True,
                  ) -> Optional[List[WorkerSpec]]:
     """Algorithms 3+4 end-to-end for one job (gang semantics).
 
@@ -358,6 +473,13 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
     per-gang heap walk (O(F + W·log F)) is used, and ``use_index=False``
     restores the seed's full O(workers x N) scan (kept for the
     ``--legacy`` benchmark baseline and as the equivalence oracle).
+
+    ``incremental_specials`` (default) serves the per-worker *specials*
+    argmax — the nodes already staged by this gang — from a live
+    :class:`_StagedOverlay` (amortized O(W log W) per gang) instead of
+    rescanning every staged node per worker (O(W²) per gang, the last
+    super-constant term of a gang decision); ``False`` keeps the full
+    rescan as the twin-run oracle (identical placements, property-tested).
     """
     workers = list(workers)
     indexed = use_index and predicate is None
@@ -380,7 +502,13 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
     base_counts = bound.counts if is_bindex else _counts_from_lists(bound)
     # capacity + (job, group) counts staged by earlier workers of this gang;
     # overlaid on base_counts so persistent state is untouched until commit
-    staged: Dict[str, int] = {}
+    overlay = None
+    if indexed and is_bindex and incremental_specials:
+        overlay = _StagedOverlay(cluster, base_counts,
+                                 min(w.n_tasks for w in workers))
+        staged = overlay.cap          # shared view: walk-path membership,
+    else:                             # feasibility and commit see one map
+        staged = {}
     staged_counts: Dict[str, Dict] = {}
     empty: Dict = {}
     bc_get = base_counts.get
@@ -420,24 +548,57 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
             # the top is an O(polylog) query; without one, a per-gang heap
             # over the feasible nodes (O(F + W·(log F + specials))).
             collide = bound.by_key.get(key_w, empty)
-            for name in staged:
-                n = cluster.node(name)
-                if n.n_slots - n.used - staged[name] < need:
-                    continue
-                rank = (full_score(name, key_w, gsize),
-                        -cluster.node_index(name))
-                if best is None or rank > best_rank:
-                    best, best_rank = n, rank
-            for name in collide:
-                if name in staged:
-                    continue                 # handled above
-                n = cluster.node(name)
-                if n.n_slots - n.used < need:
-                    continue
-                rank = (full_score(name, key_w, gsize),
-                        -cluster.node_index(name))
-                if best is None or rank > best_rank:
-                    best, best_rank = n, rank
+            if overlay is not None:
+                # incremental specials: O(1) exact scores for the
+                # correction nodes (same-key staged + collisions), heap
+                # peek for the best plain staged node.  The heap's
+                # ``gsize + A`` underestimates correction nodes, which
+                # are scored exactly here — the max over both is exact.
+                exact = overlay.by_key.get(key_w)
+                if exact:
+                    for name in exact:
+                        n = cluster.node(name)
+                        if n.n_slots - n.used - staged[name] < need:
+                            continue
+                        rank = (overlay.exact_score(name, key_w, gsize),
+                                -cluster.node_index(name))
+                        if best is None or rank > best_rank:
+                            best, best_rank = n, rank
+                for name in collide:
+                    if exact is not None and name in exact:
+                        continue             # scored above
+                    n = cluster.node(name)
+                    if n.n_slots - n.used - staged.get(name, 0) < need:
+                        continue
+                    rank = (overlay.exact_score(name, key_w, gsize),
+                            -cluster.node_index(name))
+                    if best is None or rank > best_rank:
+                        best, best_rank = n, rank
+                top = overlay.best_staged(need)
+                if top is not None:
+                    a, t_idx, t_name = top
+                    rank = (gsize + a, -t_idx)
+                    if best is None or rank > best_rank:
+                        best, best_rank = cluster.nodes[t_idx], rank
+            else:                            # oracle: full staged rescan
+                for name in staged:
+                    n = cluster.node(name)
+                    if n.n_slots - n.used - staged[name] < need:
+                        continue
+                    rank = (full_score(name, key_w, gsize),
+                            -cluster.node_index(name))
+                    if best is None or rank > best_rank:
+                        best, best_rank = n, rank
+                for name in collide:
+                    if name in staged:
+                        continue             # handled above
+                    n = cluster.node(name)
+                    if n.n_slots - n.used < need:
+                        continue
+                    rank = (full_score(name, key_w, gsize),
+                            -cluster.node_index(name))
+                    if best is None or rank > best_rank:
+                        best, best_rank = n, rank
             if score_index is not None:
                 top = score_index.best_plain(need, staged_idx)
                 if top is not None:
@@ -479,11 +640,15 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
         if best is None:
             return None                      # gang fails — do not commit
         w.node = best.name
-        staged[best.name] = staged.get(best.name, 0) + need
+        if overlay is not None:
+            overlay.stage(best.name, cluster.node_index(best.name),
+                          key_w, need)
+        else:
+            staged[best.name] = staged.get(best.name, 0) + need
+            oc = staged_counts.setdefault(best.name, {})
+            oc[key_w] = oc.get(key_w, 0) + 1
         if score_index is not None:
             staged_idx.add(cluster.node_index(best.name))
-        oc = staged_counts.setdefault(best.name, {})
-        oc[key_w] = oc.get(key_w, 0) + 1
         placed.append(w)
 
     if commit:
