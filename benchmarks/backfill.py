@@ -1,15 +1,29 @@
-"""Beyond-paper scheduler extension: backfill disciplines vs FIFO gang.
+"""Beyond-paper scheduler extension: backfill disciplines + estimators.
 
 The paper's Volcano baseline (and our faithful reproduction) admits gangs
 strictly FIFO — a blocked wide gang head-of-line-blocks everything behind
-it.  This benchmark quantifies two skip-ahead extensions on a mix of wide
-and narrow jobs:
+it.  This benchmark quantifies the skip-ahead extensions on mixes of wide
+and narrow jobs, and the *runtime estimator* the reservation trusts:
 
-* ``backfill`` — the seed's unrestricted skip-ahead (anything that fits now
-  starts; a wide head can be delayed indefinitely);
-* ``easy``     — EASY backfill (``placement="easy-backfill"``): the blocked
-  head holds a shadow-time reservation that backfilled jobs may not delay,
-  and admission attempts only demand-feasible candidates per event.
+* ``backfill``     — the seed's unrestricted skip-ahead (anything that fits
+  now starts; a wide head can be delayed indefinitely);
+* ``easy``         — EASY backfill (``placement="easy-backfill"``): the
+  blocked head holds a shadow-time reservation backfills may not delay;
+* ``easy+pred``    — EASY with the contention-aware estimator
+  (``estimator="contention"``): candidate runtimes are predicted through
+  the engine's own speed model + current co-location, so contended jobs
+  stop sneaking under the shadow time on optimistic full-speed estimates;
+* ``conservative`` — ``placement="conservative-backfill"`` (contention
+  estimator): only drains-before-shadow candidates skip ahead.
+
+Each row also records estimator accuracy: mean |predicted - actual| /
+actual over completed jobs (predictions stamped at start —
+``JobRun.predicted_finish_t``).
+
+The fleet sweep (8 x 32-slot hosts, memory-heavy Poisson heavy traffic
+with wide CPU heads) is the acceptance row: the contention estimator must
+*improve* EASY mean response — mis-estimated memory backfills are exactly
+what delays the wide heads there (``accept_pred_improves``).
 """
 from __future__ import annotations
 
@@ -17,9 +31,9 @@ import dataclasses
 import random
 import time
 
-from repro.core.cluster import paper_cluster
+from repro.core.cluster import Cluster, Node, paper_cluster
 from repro.core.profiles import Profile, Workload
-from repro.core.scenarios import SCENARIOS
+from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
 from repro.core.simulator import Simulator
 
 
@@ -32,16 +46,32 @@ def submissions(seed=0):
     return list(zip(jobs, sorted(rng.uniform(0, 600) for _ in jobs)))
 
 
-def run(csv_rows=None):
-    print("\n== Backfill vs FIFO gang (beyond-paper) ==")
-    base = SCENARIOS["CM_G_TG"]
-    for name, scn in [("FIFO", base),
-                      ("backfill", dataclasses.replace(base, backfill=True)),
-                      ("easy", dataclasses.replace(
-                          base, placement="easy-backfill"))]:
+def _est_err(done):
+    """Mean relative estimator error |predicted - actual| / actual."""
+    errs = [abs(j.predicted_finish_t - j.finish_t)
+            / max(1e-9, j.finish_t - j.start_t) for j in done
+            if j.predicted_finish_t is not None]
+    return sum(errs) / max(1, len(errs))
+
+
+def _variants(base):
+    return [
+        ("FIFO", base),
+        ("backfill", dataclasses.replace(base, backfill=True)),
+        ("easy", dataclasses.replace(base, placement="easy-backfill")),
+        ("easy+pred", dataclasses.replace(base, placement="easy-backfill",
+                                          estimator="contention")),
+        ("conservative", dataclasses.replace(
+            base, placement="conservative-backfill",
+            estimator="contention")),
+    ]
+
+
+def _paper_scale(csv_rows, seeds):
+    print("\n== Backfill vs FIFO gang (paper cluster, wide+narrow mix) ==")
+    for name, scn in _variants(SCENARIOS["CM_G_TG"]):
         t0 = time.time()
-        resp = mk = nar = 0.0
-        seeds = 5
+        resp = mk = nar = err = 0.0
         for seed in range(seeds):
             sim = Simulator(paper_cluster(), scn, seed=seed)
             done = sim.run(submissions(seed))
@@ -49,11 +79,69 @@ def run(csv_rows=None):
             mk += Simulator.makespan(done) / seeds
             ns = [j.response_time for j in done if j.job.name == "narrow"]
             nar += sum(ns) / len(ns) / seeds
-        print(f"  {name:9s} overall_resp={resp:8.0f}s makespan={mk:7.0f}s "
-              f"narrow_resp={nar:7.0f}s")
+            err += _est_err(done) / seeds
+        print(f"  {name:12s} overall_resp={resp:8.0f}s makespan={mk:7.0f}s "
+              f"narrow_resp={nar:7.0f}s est_err={err:.3f}")
         if csv_rows is not None:
             csv_rows.append((f"backfill_{name}", (time.time() - t0) * 1e6,
-                             f"resp={resp:.0f};narrow={nar:.0f}"))
+                             f"resp={resp:.0f};narrow={nar:.0f};"
+                             f"est_err={err:.3f}"))
+
+
+# fleet acceptance sweep: wide CPU heads + memory-bound narrow jobs on
+# 32-slot hosts — the regime where full-speed estimates are systematically
+# wrong (memory saturation) and estimate-driven backfill decisions matter
+FLEET_BF_WORKLOADS = (
+    Workload("wide-cpu-128", Profile.CPU, 128, 500.0),
+    Workload("mem-32", Profile.MEMORY, 32, 150.0),
+    Workload("mem-16", Profile.MEMORY, 16, 100.0),
+    Workload("mem-24", Profile.MEMORY, 24, 200.0),
+)
+
+
+def _bf_fleet():
+    return Cluster([Node(f"h{i}", n_slots=32, n_domains=2)
+                    for i in range(8)])
+
+
+def _fleet_scale(csv_rows, seeds, n_jobs):
+    print("\n== Estimator sweep (fleet: 8x32 hosts, mem-heavy traffic) ==")
+    results = {}
+    for name, scn in [
+            ("fleet_easy_remaining", SCENARIOS["FLEET_EASY"]),
+            ("fleet_easy_contention",
+             dataclasses.replace(SCENARIOS["FLEET_EASY"],
+                                 estimator="contention")),
+            ("fleet_conservative", SCENARIOS["FLEET_CONS"])]:
+        t0 = time.time()
+        resp = err = 0.0
+        for seed in range(seeds):
+            subs = poisson_heavy_traffic(n_jobs, 256, seed=seed,
+                                         utilization=1.3,
+                                         workloads=FLEET_BF_WORKLOADS,
+                                         unique_names=False)
+            sim = Simulator(_bf_fleet(), scn, seed=0)
+            done = sim.run(list(subs))
+            resp += sum(j.response_time for j in done) / len(done) / seeds
+            err += _est_err(done) / seeds
+        results[name] = (resp, err)
+        print(f"  {name:22s} mean_resp={resp:7.1f}s est_err={err:.3f}")
+        if csv_rows is not None:
+            csv_rows.append((f"backfill_{name}", (time.time() - t0) * 1e6,
+                             f"mean_resp={resp:.1f};est_err={err:.3f}"))
+    accept = (results["fleet_easy_contention"][0]
+              < results["fleet_easy_remaining"][0])
+    print(f"  accept_pred_improves={accept} (contention mean response "
+          f"beats remaining)")
+    if csv_rows is not None:
+        csv_rows.append(("backfill_accept_pred_improves", 0.0,
+                         f"accept={accept}"))
+
+
+def run(csv_rows=None, smoke=False):
+    _paper_scale(csv_rows, seeds=2 if smoke else 5)
+    _fleet_scale(csv_rows, seeds=3 if smoke else 8,
+                 n_jobs=60 if smoke else 120)
 
 
 if __name__ == "__main__":

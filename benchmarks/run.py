@@ -16,7 +16,7 @@ import inspect
 import json
 
 
-SMOKE_JOBS = ("sched", "sim_scale", "preempt")
+SMOKE_JOBS = ("sched", "sim_scale", "preempt", "backfill")
 
 
 def main() -> None:

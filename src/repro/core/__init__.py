@@ -12,10 +12,22 @@
   objects owning the *order* of the pending queue and the preemption
   decision: ``fifo`` (seed semantics, default), ``priority`` (classes +
   aging + gang preemption: a blocked high-class head kills-and-requeues
-  the cheapest running gangs below its class), and ``fairshare``
-  (weighted multi-tenant deficit accounting over consumed slot-seconds).
-  ``Workload.tenant`` / ``Workload.priority`` are the identities they
-  read.
+  the cheapest running gangs below its class — placement-aware under the
+  contention estimator, clearing the *right* node for the head's widest
+  worker), and ``fairshare`` (weighted multi-tenant deficit accounting
+  over consumed slot-seconds).  ``Workload.tenant`` /
+  ``Workload.priority`` are the identities they read;
+* ``estimates`` — pluggable :class:`~repro.core.estimates
+  .RuntimeEstimator` objects owning *runtime predictions*
+  (``Scenario.estimator``): ``remaining`` (the seed's optimistic
+  full-speed estimate, trace-pinned default) and ``contention`` (the
+  job's roofline class + planned granularity run through the *engine's
+  own speed model* — the pure ``estimates.job_speed`` shared with
+  ``Simulator._speed`` — against current memory-bandwidth co-location
+  and per-node ``mem_bw_tasks``).  Consumers: the EASY/conservative
+  backfill window and preemption victim costing; every start stamps
+  ``JobRun.predicted_finish_t`` for accuracy accounting
+  (``benchmarks/backfill.py``).
 
 **Infrastructure layer** — decides *where and when* those requests run,
 with no knowledge of why they were shaped that way:
@@ -23,9 +35,15 @@ with no knowledge of why they were shaped that way:
 * ``policies`` — pluggable :class:`~repro.core.policies.PlacementPolicy`
   objects owning admission + binding: the K8s ``default`` scheduler
   (random feasible placement), ``taskgroup`` (Algorithms 3+4 via
-  ``taskgroup``: balanced groups, affinity/anti-affinity scoring), and
+  ``taskgroup``: balanced groups, affinity/anti-affinity scoring),
   ``easy-backfill`` (head-of-queue reservations over the *discipline's*
-  head, beyond-paper);
+  head, beyond-paper) and ``conservative-backfill`` (drains-before-
+  shadow skip-ahead only).  **Reservation-overlay contract**: a policy
+  that must protect capacity during a placement passes a reserved-
+  capacity overlay (``{node: slots withheld}``) through ``place()``;
+  binders subtract it in every feasibility check exactly like their own
+  staged demand, and shared cluster state — ``Node.used``, the Fenwick
+  indexes, capacity listeners — never observes the reservation;
 * ``cluster`` — the node/slot/domain model with a Fenwick free-capacity
   index serving O(log C) feasibility queries on heterogeneous fleets,
   per-value position Fenwick trees for order-statistic queries (count /
@@ -55,12 +73,16 @@ registered discipline/policy pair.
 from repro.core.cluster import (Cluster, Node, fleet_cluster, hetero_cluster,
                                 paper_cluster)
 from repro.core.controller import allocate_tasks, hostfile, make_workers
+from repro.core.estimates import (ESTIMATORS, ContentionEstimator,
+                                  RemainingEstimator, RuntimeEstimator,
+                                  job_speed, make_estimator)
 from repro.core.planner import Granularity, select_granularity
-from repro.core.policies import (POLICIES, DefaultPolicy, EasyBackfillPolicy,
+from repro.core.policies import (POLICIES, ConservativeBackfillPolicy,
+                                 DefaultPolicy, EasyBackfillPolicy,
                                  PlacementPolicy, TaskGroupPolicy,
                                  make_policy)
-from repro.core.profiles import (PAPER_BENCHMARKS, Profile, Workload,
-                                 classify_roofline)
+from repro.core.profiles import (MEM_WEIGHT, PAPER_BENCHMARKS, Profile,
+                                 Workload, classify_roofline)
 from repro.core.queues import (QUEUES, FairShareQueue, FifoQueue,
                                PriorityQueue, QueueDiscipline, make_queue)
 from repro.core.scenarios import (SCENARIOS, TENANT_CLASSES, diurnal_poisson,
@@ -70,9 +92,12 @@ from repro.core import taskgroup
 
 __all__ = ["Cluster", "Node", "fleet_cluster", "hetero_cluster",
            "paper_cluster", "allocate_tasks", "hostfile", "make_workers",
+           "ESTIMATORS", "RuntimeEstimator", "RemainingEstimator",
+           "ContentionEstimator", "job_speed", "make_estimator",
            "Granularity", "select_granularity", "POLICIES",
            "PlacementPolicy", "DefaultPolicy", "TaskGroupPolicy",
-           "EasyBackfillPolicy", "make_policy", "PAPER_BENCHMARKS",
+           "EasyBackfillPolicy", "ConservativeBackfillPolicy",
+           "make_policy", "MEM_WEIGHT", "PAPER_BENCHMARKS",
            "Profile", "Workload", "classify_roofline", "QUEUES",
            "QueueDiscipline", "FifoQueue", "PriorityQueue",
            "FairShareQueue", "make_queue", "SCENARIOS", "TENANT_CLASSES",

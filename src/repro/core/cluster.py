@@ -21,6 +21,13 @@ degraded to O(C) per query.  The index is kept consistent through a
 ``Node.__setattr__`` hook on ``used``/``n_slots``, so existing call sites
 (and tests) that mutate nodes directly stay correct.
 
+``used`` means *committed placements only*.  Schedulers that need to
+withhold capacity during a placement (e.g. an EASY shadow-node
+reservation) express it as a reserved-capacity overlay passed through
+``place()``/``taskgroup.schedule_job(reserve=)`` — never by temporarily
+inflating ``used``, which would ripple phantom capacity changes through
+this index and every attached listener.
+
 Order-statistic queries: alongside the value-Fenwick, a position Fenwick
 tree per present free value supports :meth:`Cluster.count_free_ge` and
 :meth:`Cluster.select_free_ge` — "how many nodes have >= k free" and "which

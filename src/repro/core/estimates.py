@@ -1,0 +1,221 @@
+"""Application-layer runtime estimation (contention-aware predictions).
+
+Backfill quality is bounded by the quality of the *runtime estimates* the
+reservation logic trusts (Lifka '95 assumed user estimates; rank-aware K8s
+scheduling and elastic reallocation both show the estimate's accuracy is
+what decides whether a skip-ahead delays the protected head).  This module
+makes the estimate a pluggable application-layer object:
+
+``remaining``
+    The classic optimistic estimate: a job finishes after ``remaining``
+    work-seconds at full speed.  This is today's behaviour — scenarios
+    that select it (the default) are pinned byte-identical by the golden
+    trace hashes in ``tests/test_queues.py``.
+
+``contention``
+    Predicts through the *same speed model the engine runs* (the pure
+    :func:`job_speed`, shared with ``Simulator._speed``): the job's
+    roofline class, its planned granularity (tasks per worker / nodes),
+    the cluster's current memory-bandwidth co-location and the per-node
+    ``mem_bw_tasks`` map.  Predictions are monotone in co-location —
+    more sharers can never produce an earlier predicted finish
+    (property-tested) — and exact for solo placed jobs (the twin-run
+    oracle in ``tests/test_estimates.py``).
+
+The estimator feeds two consumers:
+
+* **EASY backfill** (``policies.EasyBackfillPolicy``): a candidate is
+  "short enough" when ``now + estimator.runtime_queued(jr)`` clears the
+  head's shadow time.  Under ``remaining`` a contended candidate is
+  systematically under-estimated, overruns the shadow and delays the
+  head; ``contention`` defers exactly those candidates.  The
+  ``conservative-backfill`` policy variant exists because of this:
+  with trustworthy estimates, *only* drains-before-shadow backfills are
+  admitted (no aggregate-slack exception), so the head cannot slip at
+  all on estimate-respecting traces.
+* **Gang preemption** (``queues.PriorityQueue``): with the contention
+  estimator selected, victim choice becomes placement-aware — prefer
+  victims whose nodes can actually host the head's widest worker.
+
+Speed-model factoring: :func:`job_speed` is a *pure* function of scalars
+and a ``(load, bandwidth)`` list — no simulator state — so the engine and
+the estimator cannot drift apart.  ``Simulator._speed`` is a thin adapter
+that gathers the live inputs and calls it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Tuple
+
+from repro.core.profiles import MEM_WEIGHT, Profile
+
+
+# --------------------------------------------------------------------------
+# the speed model, factored pure (shared by Simulator._speed and the
+# contention estimator — byte-identical arithmetic to the pre-split code)
+# --------------------------------------------------------------------------
+def cpu_factor(p, affinity: bool, tasks_per_worker: int) -> float:
+    """CPU-bound multiplicative penalty by (affinity, granularity bucket)."""
+    if not affinity:
+        return p.cpu_no_affinity
+    if tasks_per_worker >= 8:
+        return p.cpu_affinity_coarse
+    if tasks_per_worker >= 2:
+        return p.cpu_affinity_mid
+    return p.cpu_affinity_fine
+
+
+def mem_gran_factor(p, affinity: bool, tpw: int) -> float:
+    """Memory-bound granularity penalty (weak analogue of the CPU one)."""
+    if not affinity:
+        return p.mem_no_affinity
+    if tpw >= 8:
+        return p.mem_affinity_coarse
+    if tpw >= 2:
+        return p.mem_affinity_mid
+    return p.mem_affinity_fine
+
+
+def job_speed(p, affinity: bool, prof: Profile, tpw: int, n_nodes: int,
+              n_workers: int, node_loads: Iterable[Tuple[float, float]],
+              sharing: int) -> float:
+    """Relative execution speed (<= 1) of one job — pure.
+
+    ``node_loads`` yields ``(mem demand, bandwidth)`` per node the job
+    occupies (consumed only for memory-class jobs); ``sharing`` is the
+    pre-clamped count of co-resident jobs (read only without affinity —
+    pass 0 when ``affinity`` is set).  The arithmetic is exactly the
+    pre-factoring ``Simulator._speed`` body, so the engine's golden
+    traces pin this function too.
+    """
+    f = 1.0
+    if not affinity:
+        f *= 1.0 + p.share_no_affinity * sharing
+    if prof in (Profile.CPU, Profile.MIXED):
+        fc = cpu_factor(p, affinity, tpw)
+        f *= fc if prof == Profile.CPU else fc ** 0.5
+    if prof in (Profile.MEMORY, Profile.MIXED):
+        # synchronous job: bandwidth saturation on its hottest node
+        sat = 1.0
+        for ld, bw in node_loads:
+            sat = max(sat, max(1.0, ld / bw) ** p.mem_sat_exp)
+        fm = mem_gran_factor(p, affinity, tpw) * sat
+        f *= fm if prof == Profile.MEMORY else fm ** 0.5
+    if prof == Profile.NETWORK:
+        if n_workers > 1:
+            f *= p.net_multiworker
+        if n_nodes > 1:
+            f *= 1.0 + p.net_internode * (n_nodes - 1)
+    return 1.0 / f
+
+
+# --------------------------------------------------------------------------
+# estimators
+# --------------------------------------------------------------------------
+def make_estimator(sim) -> "RuntimeEstimator":
+    """Resolve a simulator's scenario to an estimator instance
+    (``scenario.estimator``: ``"remaining"`` — default, today's optimistic
+    behaviour — or ``"contention"``)."""
+    name = sim.sc.estimator
+    try:
+        return ESTIMATORS[name](sim)
+    except KeyError:
+        raise ValueError(f"unknown runtime estimator {name!r}; "
+                         f"known: {sorted(ESTIMATORS)}") from None
+
+
+class RuntimeEstimator:
+    """Predicted runtimes for one simulator instance.
+
+    Two queries, one per consumer moment:
+
+    * :meth:`runtime_queued` — a *queued* gang, placement unknown: how
+      long would it run if started now?  (EASY's backfill window.)
+    * :meth:`runtime_placed` — a gang that was *just bound* (called from
+      ``Simulator._on_start``, placement and live co-location known):
+      predicted remaining runtime, recorded as
+      ``JobRun.predicted_finish_t`` for accuracy accounting.
+    """
+
+    name = "abstract"
+
+    def __init__(self, sim):
+        self.sim = sim
+
+    def runtime_queued(self, jr) -> float:
+        raise NotImplementedError
+
+    def runtime_placed(self, jr) -> float:
+        raise NotImplementedError
+
+
+class RemainingEstimator(RuntimeEstimator):
+    """``remaining`` work at full speed — the seed's optimistic estimate
+    (and classic EASY's trust-the-user behaviour), byte-identical to the
+    pre-estimator code paths."""
+
+    name = "remaining"
+
+    def runtime_queued(self, jr) -> float:
+        return jr.remaining
+
+    def runtime_placed(self, jr) -> float:
+        return jr.remaining
+
+
+class ContentionEstimator(RuntimeEstimator):
+    """Predict through the engine's own speed model + current co-location.
+
+    For a *placed* gang the inputs are exact (its placement, the live
+    per-node memory load including itself), so a solo job's prediction
+    equals the engine's finish to the float (twin-run oracle); contended
+    predictions drift only as later events change co-location.
+
+    For a *queued* gang the placement is unknown, so the prediction uses
+    the planner's shape (``gran.n_nodes`` nodes, ``tasks_per_worker``)
+    and an expected co-location: the cluster-mean memory-bandwidth load
+    plus the job's own per-node contribution, against the mean node
+    bandwidth.  Mean load is monotone in the set of running sharers, so
+    predictions can only lengthen as co-location grows.
+    """
+
+    name = "contention"
+
+    def __init__(self, sim):
+        super().__init__(sim)
+        # the per-node bandwidth map is fixed at simulator construction,
+        # so its mean is too; the cluster-mean memory load reads the
+        # engine's running total — both O(1) per query, keeping EASY
+        # admission flat in fleet size under this estimator
+        nbw = sim._node_bw
+        self._bw_mean = (sim.sc.perf.mem_bw_tasks if nbw is None
+                         else sum(nbw.values()) / len(nbw))
+
+    def runtime_queued(self, jr) -> float:
+        sim = self.sim
+        p = sim.sc.perf
+        prof = jr.job.profile
+        gran = jr.gran
+        n_nodes = max(1, min(gran.n_nodes, gran.n_workers))
+        node_loads = ()
+        w_mem = MEM_WEIGHT.get(prof, 0.0)
+        if w_mem:
+            own = w_mem * (-(-gran.n_tasks // n_nodes))
+            n_cluster = len(sim.cluster.nodes)
+            mean_load = (sim._mem_load_sum / n_cluster
+                         if n_cluster else 0.0)
+            node_loads = ((mean_load + own, self._bw_mean),)
+        sharing = 0 if sim.sc.affinity else \
+            min(p.share_cap, len(sim.running))
+        speed = job_speed(p, sim.sc.affinity, prof, gran.tasks_per_worker,
+                          n_nodes, gran.n_workers, node_loads, sharing)
+        return jr.remaining / speed
+
+    def runtime_placed(self, jr) -> float:
+        sim = self.sim
+        return jr.remaining / sim._speed(jr, sim._mem_load_live)
+
+
+ESTIMATORS: Dict[str, type] = {
+    "remaining": RemainingEstimator,
+    "contention": ContentionEstimator,
+}

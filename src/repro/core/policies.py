@@ -14,7 +14,7 @@ weighted fair share), so "the head of the queue" — including the head the
 EASY reservation protects — is always the *discipline's* head.  Policies
 only decide whether and where the gangs they are handed can start.
 
-Three policies ship here:
+Four policies ship here:
 
 ``default``
     The Kubernetes default scheduler: per-pod uniform random choice among
@@ -38,6 +38,20 @@ Three policies ship here:
     only jobs that could fit the current free capacity are attempted at
     all, the reservation is recomputed only when cluster capacity changed,
     and queue upkeep is one batched sweep per event with admissions.
+
+``conservative-backfill``
+    EASY minus the aggregate-slack exception: only candidates whose
+    *estimated* runtime drains before the shadow time may skip ahead, so
+    with trustworthy estimates the head cannot slip at all.  Designed for
+    the contention-aware estimator (``Scenario.estimator="contention"``).
+
+Candidate runtime estimates come from the scenario's application-layer
+:class:`~repro.core.estimates.RuntimeEstimator` (``remaining`` — the
+seed's optimistic full-speed estimate, trace-pinned — or ``contention``);
+reservations are enforced through a *reserved-capacity overlay* threaded
+through ``place()`` (``{node: slots withheld}``, honoured by every
+binder's feasibility checks like staged demand), never by mutating
+``Node.used``.
 
 Placement mechanism (default vs task-group) composes with EASY admission:
 ``easy-backfill`` reads ``scenario.taskgroup`` to pick its binder.
@@ -102,7 +116,13 @@ class PlacementPolicy:
         pass
 
     # -- binding ----------------------------------------------------------
-    def place(self, jr, use_index: bool = True):
+    def place(self, jr, use_index: bool = True,
+              reserve: Optional[Dict[str, int]] = None):
+        """Bind one gang's workers (or refuse atomically).  ``reserve``
+        is a reserved-capacity overlay — ``{node name: slots withheld}``
+        — honoured by every binder's feasibility checks without touching
+        shared cluster state (the EASY shadow-node protection rides it;
+        see :meth:`EasyBackfillPolicy.admit`)."""
         raise NotImplementedError
 
     def pre_reject(self, jr, use_index: bool) -> bool:
@@ -177,13 +197,18 @@ class DefaultPolicy(PlacementPolicy):
         return (jr.gran.n_tasks > self.sim.cluster.free_slots or
                 jr.gran.tasks_per_worker > self.sim.cluster.max_free())
 
-    def place(self, jr, use_index: bool = True):
+    def place(self, jr, use_index: bool = True,
+              reserve: Optional[Dict[str, int]] = None):
         sim = self.sim
         sim.perf["place_attempts"] += 1
         cluster = sim.cluster
         keyed = sim.sc.job_ids == "uid"
         workers = make_workers(jr.job, jr.gran, uid=jr.uid)
-        staged: Dict[str, int] = {}
+        # a reserved-capacity overlay seeds the staged map: for this
+        # binder "staged" is purely a feasibility subtraction, so the
+        # reservation composes with the per-worker staging (and with the
+        # order-statistic draw's rank corrections) with no extra paths
+        staged: Dict[str, int] = dict(reserve) if reserve else {}
         for wi, w in enumerate(workers):
             # keyed draws MUST be identical across the indexed and
             # materialized paths (the trace-identity contract) — one key
@@ -285,20 +310,23 @@ class TaskGroupPolicy(PlacementPolicy):
         return (jr.gran.n_tasks > self.sim.cluster.free_slots or
                 jr.gran.tasks_per_worker > self.sim.cluster.max_free())
 
-    def place(self, jr, use_index: bool = True):
+    def place(self, jr, use_index: bool = True,
+              reserve: Optional[Dict[str, int]] = None):
         sim = self.sim
         sim.perf["place_attempts"] += 1
         if not use_index:            # legacy: rebuild the gang every attempt
             workers = make_workers(jr.job, jr.gran, uid=jr.uid)
             return TG.schedule_job(sim.cluster, workers, jr.gran.n_groups,
-                                   bound=sim.bound, use_index=False)
+                                   bound=sim.bound, use_index=False,
+                                   reserve=reserve)
         if jr._plan is None:         # plan is deterministic — cache it
             workers = make_workers(jr.job, jr.gran, uid=jr.uid)
             jr._plan = (workers, TG.make_plan(workers, jr.gran.n_groups))
         workers, plan = jr._plan
         return TG.schedule_job(sim.cluster, workers, jr.gran.n_groups,
                                bound=sim.bound, use_index=True, plan=plan,
-                               score_index=self._score_index())
+                               score_index=self._score_index(),
+                               reserve=reserve)
 
 
 class EasyBackfillPolicy(PlacementPolicy):
@@ -314,15 +342,21 @@ class EasyBackfillPolicy(PlacementPolicy):
     the cluster's capacity version, so it is recomputed at most once per
     capacity-changing event.
 
-    Estimated runtimes for the backfill window use ``remaining`` work at
-    full speed — optimistic under contention, exactly like the user-supplied
-    estimates classic EASY schedulers trust.  A too-short estimate can delay
-    the head (bounded by the backfill job's true runtime); it cannot be
+    Estimated runtimes for the backfill window come from the scenario's
+    :class:`~repro.core.estimates.RuntimeEstimator`: ``remaining`` work at
+    full speed by default — optimistic under contention, exactly like the
+    user-supplied estimates classic EASY schedulers trust — or the
+    contention-aware predictor (``Scenario.estimator="contention"``),
+    which runs the candidate through the engine's own speed model and the
+    cluster's current co-location.  A too-short estimate can delay the
+    head (bounded by the backfill job's true runtime); it cannot be
     *overtaken*: slack-window backfills are capped by the aggregate extra
     slots, and on the *shadow node* — the node whose projected drain is
     what lets the head's widest worker fit — they may consume only the
     projected surplus beyond that worker's demand: the protected capacity
-    is masked off while their placement runs, so the binder cannot squat
+    is withheld through a *reserved-capacity overlay* threaded through
+    ``place()`` (never written to ``Node.used`` — shared cluster state,
+    its indexes and listeners see nothing), so the binder cannot squat
     on what the head is waiting for.  (Per-node reservations beyond that
     single node are not modelled; the head may still slip by one backfill
     runtime on multi-node gangs, as in classic slot-count EASY.)
@@ -339,8 +373,9 @@ class EasyBackfillPolicy(PlacementPolicy):
         self._resv: Optional[tuple] = None   # (head, cap_ver, shadow, extra)
 
     # binding is delegated wholesale
-    def place(self, jr, use_index: bool = True):
-        return self._binder.place(jr, use_index)
+    def place(self, jr, use_index: bool = True,
+              reserve: Optional[Dict[str, int]] = None):
+        return self._binder.place(jr, use_index, reserve)
 
     def pre_reject(self, jr, use_index: bool) -> bool:
         return self._binder.pre_reject(jr, use_index)
@@ -472,8 +507,13 @@ class EasyBackfillPolicy(PlacementPolicy):
         sim.perf["reserve_s"] += time.perf_counter() - t_resv
         return shadow, extra, shadow_node, shadow_slack
 
+    # slack-window backfills allowed (EASY).  The conservative variant
+    # turns this off: only drains-before-shadow candidates may start.
+    _slack_window = True
+
     def admit(self, dirty_nodes: Optional[set], use_index: bool = True):
         sim = self.sim
+        est = sim.estimator
         while sim.queue:
             head = sim.queue[0]
             placed = None if self.pre_reject(head, use_index) \
@@ -495,32 +535,34 @@ class EasyBackfillPolicy(PlacementPolicy):
             for _, jr in cands:
                 if jr.gran.n_tasks > sim.cluster.free_slots:
                     continue                  # earlier backfill shrank free
-                drains_in_time = sim.now + jr.remaining <= shadow
+                # the scenario's estimator decides "short enough":
+                # "remaining" trusts full speed (classic EASY optimism),
+                # "contention" predicts through the engine's speed model
+                # and current co-location, so systematically-contended
+                # candidates stop sneaking under the shadow time
+                runtime = est.runtime_queued(jr)
+                drains_in_time = sim.now + runtime <= shadow
                 fits_window = (drains_in_time
-                               or jr.gran.n_tasks <= extra)
+                               or (self._slack_window
+                                   and jr.gran.n_tasks <= extra))
                 if not fits_window or self.pre_reject(jr, use_index):
                     continue
                 if drains_in_time or shadow_node is None:
                     placed = self.place(jr, use_index)
                 else:
-                    # mask the shadow node's protected capacity (all but
-                    # the projected surplus) while this slack-window
-                    # placement runs: the binder can then use at most
-                    # ``shadow_slack`` of the node the head waits for,
-                    # and hopeless gangs fail fast instead of being
-                    # placed and rolled back at every event.  The mask
-                    # rides the documented auto-reindex contract of
-                    # ``Node.used``; binders must not cache cluster state
-                    # across placements (none do — threading a reserved-
-                    # capacity overlay through place() is the cleaner
-                    # future shape, see ROADMAP)
+                    # a slack-window candidate may consume at most the
+                    # projected surplus of the shadow node — the node
+                    # whose drain the head is waiting for.  The protected
+                    # capacity is withheld via a reserved-capacity
+                    # overlay threaded through place(): binders treat it
+                    # exactly like staged demand, so hopeless gangs fail
+                    # fast and shared cluster state (``Node.used``, the
+                    # capacity indexes, their listeners) never sees the
+                    # reservation
                     node = sim.cluster.node(shadow_node)
-                    take = max(0, node.n_slots - node.used - shadow_slack)
-                    node.used += take
-                    try:
-                        placed = self.place(jr, use_index)
-                    finally:
-                        node.used -= take
+                    take = node.free - shadow_slack
+                    resv = {shadow_node: take} if take > 0 else None
+                    placed = self.place(jr, use_index, resv)
                     if placed is not None:
                         shadow_slack -= sum(w.n_tasks for w in placed
                                             if w.node == shadow_node)
@@ -528,7 +570,7 @@ class EasyBackfillPolicy(PlacementPolicy):
                     continue
                 started.add(jr)
                 self._start(jr, placed, dirty_nodes)
-                if sim.now + jr.remaining > shadow:
+                if sim.now + runtime > shadow:
                     extra -= jr.gran.n_tasks  # consumed reservation slack
             if started:                       # one O(Q) sweep per event, not
                 sim.queue[:] = [j for j in sim.queue   # one per placement
@@ -536,8 +578,29 @@ class EasyBackfillPolicy(PlacementPolicy):
             return
 
 
+class ConservativeBackfillPolicy(EasyBackfillPolicy):
+    """Conservative backfill: skip-ahead *only* for candidates whose
+    estimated runtime drains before the head's shadow time — the
+    aggregate-slack exception EASY allows (``n_tasks <= extra``, which can
+    slip the head by one backfill runtime on multi-node gangs) is off.
+
+    The variant only makes sense with estimates worth trusting: under the
+    default optimistic ``remaining`` estimator a contended backfill still
+    overruns its promise, so pair it with ``Scenario.estimator=
+    "contention"`` (the shipped ``*_CONS`` scenarios do).  With trustworthy
+    estimates every admitted backfill finishes before the reservation
+    matures, so the head cannot be delayed by a backfill at all —
+    asserted per-trace by the reservation-violation checks in
+    ``tests/test_estimates.py``."""
+
+    name = "conservative-backfill"
+
+    _slack_window = False
+
+
 POLICIES = {
     "default": DefaultPolicy,
     "taskgroup": TaskGroupPolicy,
     "easy-backfill": EasyBackfillPolicy,
+    "conservative-backfill": ConservativeBackfillPolicy,
 }

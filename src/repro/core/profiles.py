@@ -25,6 +25,14 @@ class Profile(str, enum.Enum):
     MIXED = "cpu+memory"   # MiniFE-style
 
 
+# memory-bandwidth demand weight per task of each roofline class — the
+# single source of truth for the engine's live per-node mem-load accounting
+# (``Simulator``) and the contention estimator's co-location predictions
+# (``estimates``): a mixed job presses the memory controllers at half the
+# weight of a pure STREAM-class job
+MEM_WEIGHT: Dict[Profile, float] = {Profile.MEMORY: 1.0, Profile.MIXED: 0.5}
+
+
 def classify_roofline(compute_s: float, hbm_s: float,
                       collective_s: float) -> Profile:
     """Dominant roofline term -> paper profile."""

@@ -47,7 +47,12 @@ checkpoint), ties broken newest-``_run_seq``-first (least sunk work,
 deterministic).  The cheapest prefix whose projected freed capacity
 satisfies the gang's necessary conditions (total demand vs free slots,
 widest worker vs best node) is killed via the simulator's ``_on_stop``
-teardown and requeued resuming from its last checkpoint; counts and
+teardown and requeued resuming from its last checkpoint.  With
+``placement_aware`` (defaulting on under the contention estimator,
+``Scenario.estimator="contention"``) the widest-worker deficit is
+resolved *placement-first*: the node that can be cleared for the head's
+widest worker at the least wasted work is emptied before the cheapest-
+prefix fill, so kills stop landing on hosts that can never help; counts and
 wasted work are recorded on the victim (``JobRun.preemptions`` /
 ``JobRun.wasted_work``) and in ``Simulator.perf`` (``preemptions`` /
 ``preempt_wasted_s``).  A kill restarts the victim's aging clock
@@ -166,7 +171,12 @@ class PriorityQueue(QueueDiscipline):
     below this class *and* the head's; default None = head's class
     alone), ``preempt_delay`` (seconds the head must have queued before
     it may kill — lets natural completions resolve transient deficits;
-    default 0).
+    default 0), ``placement_aware`` (victim choice frees the *right*
+    node for the head's widest worker, not just the most total slots;
+    defaults to on exactly when the scenario runs the contention
+    estimator — the application-layer signal that placement-shaped
+    predictions are wanted — so ``estimator="remaining"`` scenarios
+    keep the PR-4 cheapest-prefix behaviour bit-for-bit).
     """
 
     name = "priority"
@@ -179,6 +189,9 @@ class PriorityQueue(QueueDiscipline):
         below = self.cfg.get("preempt_below")
         self.preempt_below = None if below is None else int(below)
         self.preempt_delay = float(self.cfg.get("preempt_delay", 0.0))
+        self.placement_aware = bool(
+            self.cfg.get("placement_aware",
+                         sim.sc.estimator == "contention"))
 
     def effective_priority(self, jr, now: float) -> float:
         """Class plus queue age (since *last enqueue* — preemption resets
@@ -245,15 +258,19 @@ class PriorityQueue(QueueDiscipline):
             saved = (done // ck) * ck if ck > 0 else 0.0
             return (done - saved) * jr.gran.n_tasks
 
-        victims.sort(key=lambda jr: (cost(jr), -jr._run_seq))
-        # plan the cheapest prefix whose projected freed capacity satisfies
+        costs = {jr: cost(jr) for jr in victims}
+        victims.sort(key=lambda jr: (costs[jr], -jr._run_seq))
+        # plan the cheapest set whose projected freed capacity satisfies
         # the head's necessary conditions (no gang is killed if even
         # killing everyone below the class could not make the gang fit)
         freed: Dict[str, int] = {}
         plan = []
-        satisfied = False
-        for jr in victims:
+        planned: set = set()
+
+        def _free_gang(jr):
+            nonlocal free_total, cur_max
             plan.append(jr)
+            planned.add(jr)
             free_total += jr.gran.n_tasks
             for node, tasks in jr.nodes_used.items():
                 f = freed.get(node)
@@ -263,9 +280,53 @@ class PriorityQueue(QueueDiscipline):
                 freed[node] = f
                 if f > cur_max:
                     cur_max = f
-            if free_total >= need_total and cur_max >= need_worker:
-                satisfied = True
+
+        if self.placement_aware and cur_max < need_worker:
+            # placement-aware phase: the head is blocked on one *node*
+            # being wide enough, and killing the globally-cheapest gangs
+            # can free slots scattered across hosts that never add up.
+            # Pick the node that can be cleared for the head's widest
+            # worker at the least wasted work — for each node whose
+            # ``n_slots`` can host it at all, take victims resident there
+            # cheapest-first until its projected free reaches the demand,
+            # then choose the (total cost, node index) minimum — and kill
+            # exactly that subset before falling through to the cheapest-
+            # prefix fill for the aggregate-slots condition.
+            by_node: Dict[str, list] = {}
+            for jr in victims:                 # cost order is preserved
+                for node, tasks in jr.nodes_used.items():
+                    by_node.setdefault(node, []).append((jr, tasks))
+            best = None                        # ((cost, node idx), subset)
+            for node_name, vs in by_node.items():
+                nd = cluster.node(node_name)
+                if nd.n_slots < need_worker:
+                    continue                   # can never host the worker
+                f = nd.free
+                csum = 0.0
+                subset = []
+                for jr, tasks in vs:
+                    if f >= need_worker:
+                        break
+                    f += tasks
+                    csum += costs[jr]
+                    subset.append(jr)
+                if f >= need_worker:
+                    key = (csum, cluster.node_index(node_name))
+                    if best is None or key < best[0]:
+                        best = (key, subset)
+            if best is None:
+                return False                   # no node can be cleared
+            for jr in best[1]:
+                _free_gang(jr)
+        satisfied = (free_total >= need_total and cur_max >= need_worker)
+        for jr in victims:
+            if satisfied:
                 break
+            if jr in planned:
+                continue
+            _free_gang(jr)
+            satisfied = (free_total >= need_total
+                         and cur_max >= need_worker)
         if not satisfied:
             return False
         for jr in plan:

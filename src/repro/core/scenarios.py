@@ -81,6 +81,21 @@ SCENARIOS: Dict[str, Scenario] = {
                            policy="granularity", taskgroup=True,
                            job_ids="uid", queue="fairshare",
                            queue_cfg={"weights": TENANT_WEIGHTS}),
+    # ---- contention-aware runtime estimation (repro.core.estimates) ------
+    # EASY's backfill window predicted through the engine's own speed
+    # model + current co-location instead of optimistic full-speed
+    # "remaining"; preemption victim costing becomes placement-aware
+    "FLEET_EASY_PRED": Scenario("FLEET_EASY_PRED", affinity=True,
+                                policy="granularity", taskgroup=True,
+                                placement="easy-backfill", job_ids="uid",
+                                estimator="contention"),
+    # conservative backfill: only drains-before-shadow candidates skip
+    # ahead (no aggregate-slack exception) — the head cannot slip when
+    # the estimates hold, hence paired with the contention estimator
+    "FLEET_CONS": Scenario("FLEET_CONS", affinity=True,
+                           policy="granularity", taskgroup=True,
+                           placement="conservative-backfill",
+                           job_ids="uid", estimator="contention"),
     # the long-horizon composite: priority + preemption over EASY backfill
     # reservations, driven by ``diurnal_poisson`` arrivals (the day/night
     # load cycle) in ``benchmarks/preempt.py``

@@ -60,15 +60,15 @@ import random
 import time
 from typing import Dict, List, Optional
 
+from repro.core import estimates as EST
 from repro.core import policies as POL
 from repro.core import queues as QD
 from repro.core.cluster import Cluster
 from repro.core.controller import WorkerSpec
 from repro.core.planner import Granularity, select_granularity
+from repro.core.profiles import MEM_WEIGHT as _MEM_WEIGHT
 from repro.core.profiles import Profile, Workload
 from repro.core import taskgroup as TG
-
-_MEM_WEIGHT = {Profile.MEMORY: 1.0, Profile.MIXED: 0.5}
 
 
 # --------------------------------------------------------------------------
@@ -123,6 +123,12 @@ class Scenario:
     # "priority", weights for "fairshare" (see repro.core.queues)
     queue: Optional[str] = None
     queue_cfg: Optional[Dict] = None
+    # runtime-estimator name ("remaining" | "contention"): what the EASY
+    # backfill window (and, for "contention", placement-aware preemption
+    # victim costing) believes about a candidate's runtime.  "remaining"
+    # is the seed's optimistic full-speed estimate, pinned byte-identical
+    # by the golden trace hashes (see repro.core.estimates)
+    estimator: str = "remaining"
 
 
 @dataclasses.dataclass(eq=False)         # identity hash: JobRuns live in the
@@ -140,6 +146,9 @@ class JobRun:                            # per-node running-jobs index
     speed: float = 1.0
     preemptions: int = 0                 # times killed by gang preemption
     wasted_work: float = 0.0             # work-seconds lost to preemptions
+    # the scenario estimator's finish prediction, stamped at (re)start —
+    # accuracy = |predicted - actual| / actual (see benchmarks/backfill.py)
+    predicted_finish_t: Optional[float] = None
     # engine-internal state (lazy progress sync + heap-entry invalidation)
     _queued_t: float = dataclasses.field(default=0.0, repr=False)
     # ^ last enqueue time (submit or kill-requeue): the aging clock —
@@ -171,24 +180,8 @@ class JobRun:                            # per-node running-jobs index
         return self.finish_t - self.start_t
 
 
-def _cpu_factor(p: PerfParams, affinity: bool, tasks_per_worker: int) -> float:
-    if not affinity:
-        return p.cpu_no_affinity
-    if tasks_per_worker >= 8:
-        return p.cpu_affinity_coarse
-    if tasks_per_worker >= 2:
-        return p.cpu_affinity_mid
-    return p.cpu_affinity_fine
-
-
-def _mem_gran_factor(p: PerfParams, affinity: bool, tpw: int) -> float:
-    if not affinity:
-        return p.mem_no_affinity
-    if tpw >= 8:
-        return p.mem_affinity_coarse
-    if tpw >= 2:
-        return p.mem_affinity_mid
-    return p.mem_affinity_fine
+# the speed-model factor tables moved to ``repro.core.estimates`` (pure,
+# shared with the contention estimator)
 
 
 class Simulator:
@@ -211,6 +204,9 @@ class Simulator:
         self._cap_ver = 0                      # bumped on any capacity change
         self._node_jobs: Dict[str, set] = {}   # node -> running JobRuns
         self._mem_load_live: Dict[str, float] = {}
+        self._mem_load_sum = 0.0               # running total of the above
+        #                                      # (O(1) cluster-mean reads
+        #                                      # for the estimator)
         self._finish_heap: List[tuple] = []
         # jobs started since the last speed refresh: running, but not yet
         # holding a valid finish-heap entry (EASY reservations merge them
@@ -241,6 +237,9 @@ class Simulator:
                              for n in cluster.nodes}
         self.policy = POL.make_policy(self)    # infrastructure-layer policy
         self.discipline = QD.make_queue(self)  # application-layer queue
+        self.estimator = EST.make_estimator(self)  # application-layer runtime
+        #                                          # predictions (backfill
+        #                                          # window, victim costing)
 
     # ---------------- submission -----------------------------------------
     def submit(self, job: Workload, t: float):
@@ -303,6 +302,8 @@ class Simulator:
             nodes[w.node] = nodes.get(w.node, 0) + w.n_tasks
         jr._nodes = nodes
         w_mem = _MEM_WEIGHT.get(jr.job.profile, 0.0)
+        if w_mem:
+            self._mem_load_sum += w_mem * sum(nodes.values())
         for node, tasks in nodes.items():
             self._node_jobs.setdefault(node, set()).add(jr)
             if w_mem:
@@ -311,6 +312,10 @@ class Simulator:
         jr._synced_t = self.now
         jr._ver += 1              # any old heap entry is stale
         jr._pushed = False
+        # stamp the estimator's finish prediction now that placement and
+        # live co-location are known (a restart after preemption/failure
+        # re-stamps — accuracy is judged against the final run)
+        jr.predicted_finish_t = self.now + self.estimator.runtime_placed(jr)
         self.discipline.on_start(jr)
         if dirty_nodes is not None:
             dirty_nodes.update(nodes)
@@ -326,6 +331,8 @@ class Simulator:
             self.cluster.node(w.node).used -= w.n_tasks
             self.bound.remove(w)
         w_mem = _MEM_WEIGHT.get(jr.job.profile, 0.0)
+        if w_mem:
+            self._mem_load_sum -= w_mem * sum(nodes.values())
         for node, tasks in nodes.items():
             jobs = self._node_jobs.get(node)
             if jobs is not None:
@@ -424,35 +431,27 @@ class Simulator:
         return len(seen)
 
     def _speed(self, jr: JobRun, mem_load: Dict[str, float]) -> float:
+        """Gather the live inputs and evaluate the pure speed model
+        (``estimates.job_speed`` — shared with the contention estimator,
+        so prediction and execution cannot drift apart).  Heterogeneous
+        fleets read the per-node bandwidth map; the sharing count is
+        computed only when the scenario actually reads it."""
         p = self.sc.perf
         prof = jr.job.profile
-        tpw = jr.gran.tasks_per_worker
-        f = 1.0
-        if not self.sc.affinity:
-            f *= 1.0 + p.share_no_affinity * \
-                self._sharing_jobs(jr, p.share_cap)
-        if prof in (Profile.CPU, Profile.MIXED):
-            fc = _cpu_factor(p, self.sc.affinity, tpw)
-            f *= fc if prof == Profile.CPU else fc ** 0.5
+        nodes = jr.nodes_used
+        sharing = 0 if self.sc.affinity else \
+            self._sharing_jobs(jr, p.share_cap)
         if prof in (Profile.MEMORY, Profile.MIXED):
-            # synchronous job: bandwidth saturation on its hottest node;
-            # heterogeneous fleets read the per-node bandwidth map
-            sat = 1.0
             nbw = self._node_bw
-            for node in jr.nodes_used:
-                ld = mem_load.get(node, 0.0)
-                bw = p.mem_bw_tasks if nbw is None else nbw[node]
-                sat = max(sat,
-                          max(1.0, ld / bw) ** p.mem_sat_exp)
-            fm = _mem_gran_factor(p, self.sc.affinity, tpw) * sat
-            f *= fm if prof == Profile.MEMORY else fm ** 0.5
-        if prof == Profile.NETWORK:
-            n_nodes = len(jr.nodes_used)
-            if len(jr.workers) > 1:
-                f *= p.net_multiworker
-            if n_nodes > 1:
-                f *= 1.0 + p.net_internode * (n_nodes - 1)
-        return 1.0 / f
+            bw = p.mem_bw_tasks
+            node_loads = [(mem_load.get(node, 0.0),
+                           bw if nbw is None else nbw[node])
+                          for node in nodes]
+        else:
+            node_loads = ()
+        return EST.job_speed(p, self.sc.affinity, prof,
+                             jr.gran.tasks_per_worker, len(nodes),
+                             len(jr.workers), node_loads, sharing)
 
     def _refresh_speeds(self):
         """Legacy full refresh: every running job, mem load rebuilt."""

@@ -210,11 +210,21 @@ class ScoreIndex:
             heapq.heappush(heap, idx)
 
     # -- query -------------------------------------------------------------
-    def best_plain(self, need: int, staged_idx) -> Optional[tuple]:
+    def best_plain(self, need: int, staged_idx,
+                   reserved: Optional[Dict[int, int]] = None
+                   ) -> Optional[tuple]:
         """Lexicographic min ``(busy level, node idx)`` among nodes with
         ``free >= need``, excluding ``staged_idx`` (the current gang's
         staged nodes — those are scored separately as specials).  Exactly
-        the top the per-gang heap walk would surface."""
+        the top the per-gang heap walk would surface.
+
+        ``reserved`` is the placement's reserved-capacity overlay
+        (node idx -> withheld slots, e.g. an EASY shadow-node
+        reservation): a reserved node stays a candidate — at its live
+        bucket and unchanged rank — only while ``free - withheld >=
+        need``; the withheld slots are invisible to the query without
+        any mutation of ``Node.used`` (so no index churn, and shared
+        cluster state never sees the reservation)."""
         if self._dirty:
             self._flush()
         lv, fr = self._lv, self._fr
@@ -234,6 +244,14 @@ class ScoreIndex:
                         heapq.heappop(heap)   # stale: node moved on
                         continue
                     if idx in staged_idx:     # special, not plain
+                        if restore is None:
+                            restore = []
+                        restore.append(heapq.heappop(heap))
+                        continue
+                    if reserved is not None and \
+                            free - reserved.get(idx, 0) < need:
+                        # reserved capacity masks this node for this
+                        # worker size only — restore for later queries
                         if restore is None:
                             restore = []
                         restore.append(heapq.heappop(heap))
@@ -289,10 +307,11 @@ class _StagedOverlay:
     """
 
     __slots__ = ("cluster", "base", "cap", "counts", "new_keys", "by_key",
-                 "heap", "A", "min_need")
+                 "heap", "A", "min_need", "reserve")
 
     def __init__(self, cluster: Cluster, base_counts: Dict[str, Dict],
-                 min_need: int):
+                 min_need: int,
+                 reserve: Optional[Dict[str, int]] = None):
         self.cluster = cluster
         self.base = base_counts
         self.cap: Dict[str, int] = {}        # name -> staged slot demand
@@ -302,6 +321,10 @@ class _StagedOverlay:
         self.heap: List[tuple] = []          # (-A, idx, name, A) lazy
         self.A: Dict[str, int] = {}          # name -> live A value
         self.min_need = min_need             # smallest worker of the gang
+        # reserved-capacity overlay (name -> withheld slots), constant for
+        # the gang: subtracted from feasibility like staged demand, never
+        # written to ``Node.used``
+        self.reserve = reserve or _EMPTY_INT
 
     def stage(self, name: str, idx: int, key_w: tuple, need: int):
         self.cap[name] = self.cap.get(name, 0) + need
@@ -351,7 +374,8 @@ class _StagedOverlay:
                 heapq.heappop(heap)           # stale: A decreased since
                 continue
             n = node(name)
-            fc = n.n_slots - n.used - self.cap[name]
+            fc = n.n_slots - n.used - self.cap[name] \
+                - self.reserve.get(name, 0)
             if fc < need:
                 heapq.heappop(heap)
                 if fc < self.min_need:        # dead for the whole gang
@@ -370,6 +394,7 @@ class _StagedOverlay:
 
 
 _EMPTY: Dict = {}
+_EMPTY_INT: Dict[str, int] = {}
 
 
 def build_groups(n_groups: int, workers: Sequence[WorkerSpec]) -> List[Group]:
@@ -451,6 +476,7 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
                  plan=None,
                  score_index: Optional[ScoreIndex] = None,
                  incremental_specials: bool = True,
+                 reserve: Optional[Dict[str, int]] = None,
                  ) -> Optional[List[WorkerSpec]]:
     """Algorithms 3+4 end-to-end for one job (gang semantics).
 
@@ -480,6 +506,20 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
     rescanning every staged node per worker (O(W²) per gang, the last
     super-constant term of a gang decision); ``False`` keeps the full
     rescan as the twin-run oracle (identical placements, property-tested).
+
+    ``reserve`` is a *reserved-capacity overlay* — ``{node name: slots
+    withheld}`` — threaded through every feasibility check exactly like
+    staged demand (the caller-side analogue of the gang's own
+    ``_StagedOverlay``).  A reserved node stays a candidate, at its
+    unchanged score, only for workers its unreserved surplus can hold.
+    This is how EASY/conservative backfill protect a shadow node during
+    slack-window placements: placement-identical to temporarily
+    inflating ``Node.used`` (property-tested against that legacy
+    masking), but shared cluster state — indexes, listeners, concurrent
+    readers — never sees the reservation.  Callers reserve an *existing*
+    surplus: each withheld amount must not exceed the node's current
+    free capacity (a mask beyond free would leak negative slack into the
+    aggregate pre-rejects; the overlay simply rules the node out).
     """
     workers = list(workers)
     indexed = use_index and predicate is None
@@ -500,12 +540,18 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
 
     is_bindex = isinstance(bound, BoundIndex)
     base_counts = bound.counts if is_bindex else _counts_from_lists(bound)
+    rs_get = (reserve or _EMPTY_INT).get
+    reserved_idx = None               # score-index form (node idx keyed)
+    if reserve and score_index is not None:
+        reserved_idx = {cluster.node_index(n): r
+                        for n, r in reserve.items() if r > 0}
     # capacity + (job, group) counts staged by earlier workers of this gang;
     # overlaid on base_counts so persistent state is untouched until commit
     overlay = None
     if indexed and is_bindex and incremental_specials:
         overlay = _StagedOverlay(cluster, base_counts,
-                                 min(w.n_tasks for w in workers))
+                                 min(w.n_tasks for w in workers),
+                                 reserve=reserve)
         staged = overlay.cap          # shared view: walk-path membership,
     else:                             # feasibility and commit see one map
         staged = {}
@@ -558,7 +604,8 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
                 if exact:
                     for name in exact:
                         n = cluster.node(name)
-                        if n.n_slots - n.used - staged[name] < need:
+                        if n.n_slots - n.used - staged[name] \
+                                - rs_get(name, 0) < need:
                             continue
                         rank = (overlay.exact_score(name, key_w, gsize),
                                 -cluster.node_index(name))
@@ -568,7 +615,8 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
                     if exact is not None and name in exact:
                         continue             # scored above
                     n = cluster.node(name)
-                    if n.n_slots - n.used - staged.get(name, 0) < need:
+                    if n.n_slots - n.used - staged.get(name, 0) \
+                            - rs_get(name, 0) < need:
                         continue
                     rank = (overlay.exact_score(name, key_w, gsize),
                             -cluster.node_index(name))
@@ -583,7 +631,8 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
             else:                            # oracle: full staged rescan
                 for name in staged:
                     n = cluster.node(name)
-                    if n.n_slots - n.used - staged[name] < need:
+                    if n.n_slots - n.used - staged[name] \
+                            - rs_get(name, 0) < need:
                         continue
                     rank = (full_score(name, key_w, gsize),
                             -cluster.node_index(name))
@@ -593,14 +642,14 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
                     if name in staged:
                         continue             # handled above
                     n = cluster.node(name)
-                    if n.n_slots - n.used < need:
+                    if n.n_slots - n.used - rs_get(name, 0) < need:
                         continue
                     rank = (full_score(name, key_w, gsize),
                             -cluster.node_index(name))
                     if best is None or rank > best_rank:
                         best, best_rank = n, rank
             if score_index is not None:
-                top = score_index.best_plain(need, staged_idx)
+                top = score_index.best_plain(need, staged_idx, reserved_idx)
                 if top is not None:
                     L, idx = top
                     name = cluster.nodes[idx].name
@@ -611,8 +660,14 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
             else:
                 heap = walk_cache.get(need)
                 if heap is None:
+                    # reserved nodes enter the walk only when their
+                    # unreserved surplus still fits this worker size
+                    # (exactly the candidate set a used-mask would yield)
                     heap = [(len(bc_get(n.name, empty)), i, n.name)
-                            for i, n in cluster.free_ge_items(need)]
+                            for i, n in cluster.free_ge_items(need)
+                            if not reserve
+                            or n.n_slots - n.used - rs_get(n.name, 0)
+                            >= need]
                     heapq.heapify(heap)
                     walk_cache[need] = heap
                 while heap and heap[0][2] in staged:
@@ -632,7 +687,8 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
                 if not indexed and not predicate(w, n):
                     continue
                 name = n.name
-                if n.n_slots - n.used - st_get(name, 0) < need:
+                if n.n_slots - n.used - st_get(name, 0) \
+                        - rs_get(name, 0) < need:
                     continue
                 rank = (full_score(name, key_w, gsize), -idx)
                 if best is None or rank > best_rank:

@@ -1,10 +1,11 @@
 """Use hypothesis when installed, else a thin deterministic fallback.
 
 The fallback implements exactly what this suite uses — ``given`` with
-``st.integers`` / ``st.sampled_from`` strategies and a no-op ``settings``
-decorator — by running each property on a bounded number of seeded
-pseudo-random examples.  No shrinking, no database: just enough to keep the
-property tests meaningful on machines without hypothesis installed.
+``st.integers`` / ``st.floats`` / ``st.booleans`` / ``st.sampled_from``
+strategies and a no-op ``settings`` decorator — by running each property
+on a bounded number of seeded pseudo-random examples.  No shrinking, no
+database: just enough to keep the property tests meaningful on machines
+without hypothesis installed.
 """
 try:
     from hypothesis import given, settings, strategies as st   # noqa: F401
@@ -29,8 +30,16 @@ except ImportError:
         elements = list(elements)
         return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
 
+    def _floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
     st = types.SimpleNamespace(integers=_integers,
-                               sampled_from=_sampled_from)
+                               sampled_from=_sampled_from,
+                               floats=_floats,
+                               booleans=_booleans)
 
     def settings(max_examples=None, **_ignored):
         def deco(fn):

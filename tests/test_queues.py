@@ -105,6 +105,86 @@ def test_fifo_traces_pinned_with_failures():
     assert trace_hash(sim, done) == "70cd966f876f042a"
 
 
+# ----------------------------------------------------------------------
+# estimator="remaining" is not a behaviour change: the speed-model
+# factoring (estimates.job_speed) and the reserved-capacity overlay that
+# replaced the EASY Node.used masking must be byte-identical whenever the
+# new estimator is off.  Hashes recorded on the PR-4 tree (before
+# core/estimates.py and the overlay existed), scenario x seed x failures
+# x both job_ids modes.
+# ----------------------------------------------------------------------
+GOLDEN_REMAINING = [
+    ("CM_G", 0, False, "name", "6fe8581d2a2fba05"),
+    ("CM_G", 0, False, "uid", "bf345abf7fc99935"),
+    ("CM_G", 0, True, "name", "8954443fe1b4e9e5"),
+    ("CM_G", 0, True, "uid", "d09888b07d4cfb53"),
+    ("CM_G", 1, False, "name", "ffcbc53b89c0057f"),
+    ("CM_G", 1, False, "uid", "5004b2d52d740292"),
+    ("CM_G", 1, True, "name", "18e5d44ab4c2c344"),
+    ("CM_G", 1, True, "uid", "0249fc1890e78f97"),
+    ("CM_G_EASY", 0, False, "name", "6af3ca096e47ea19"),
+    ("CM_G_EASY", 0, False, "uid", "252cf517dd1c88df"),
+    ("CM_G_EASY", 0, True, "name", "8954443fe1b4e9e5"),
+    ("CM_G_EASY", 0, True, "uid", "02ddde212826443b"),
+    ("CM_G_EASY", 1, False, "name", "0d862ba121ed28b1"),
+    ("CM_G_EASY", 1, False, "uid", "f8ddf1ea63328ee0"),
+    ("CM_G_EASY", 1, True, "name", "638b3ac1bfb586d2"),
+    ("CM_G_EASY", 1, True, "uid", "459c7c19bede9dd7"),
+    ("CM_G_TG", 0, False, "name", "a576e2d104c610df"),
+    ("CM_G_TG", 0, False, "uid", "a576e2d104c610df"),
+    ("CM_G_TG", 0, True, "name", "70cd966f876f042a"),
+    ("CM_G_TG", 0, True, "uid", "ae4851a548ba8353"),
+    ("CM_G_TG", 1, False, "name", "47b6ba55af1e40e5"),
+    ("CM_G_TG", 1, False, "uid", "2b85585a0a15a937"),
+    ("CM_G_TG", 1, True, "name", "480436ad3b080720"),
+    ("CM_G_TG", 1, True, "uid", "480436ad3b080720"),
+    ("CM_G_TG_EASY", 0, False, "name", "79407636eff8b153"),
+    ("CM_G_TG_EASY", 0, False, "uid", "79407636eff8b153"),
+    ("CM_G_TG_EASY", 0, True, "name", "0bc0992890b87124"),
+    ("CM_G_TG_EASY", 0, True, "uid", "d95c8d8e7adc2065"),
+    ("CM_G_TG_EASY", 1, False, "name", "2e48a2b62d57d272"),
+    ("CM_G_TG_EASY", 1, False, "uid", "0be38c34d3106d68"),
+    ("CM_G_TG_EASY", 1, True, "name", "480436ad3b080720"),
+    ("CM_G_TG_EASY", 1, True, "uid", "480436ad3b080720"),
+]
+
+# fleet heavy-traffic rows (16 x 4-slot hosts, aliased names), +failures
+GOLDEN_REMAINING_FLEET = [
+    ("FLEET_EASY", False, "2dc1b01cf9d7e464"),
+    ("FLEET_EASY", True, "4457bd6735ce8bce"),
+    ("CM_G_EASY", False, "d5d6bb77490758b0"),
+    ("CM_G_EASY", True, "750e1483d346dfdd"),
+    ("FLEET", False, "06968041a3feb965"),
+    ("FLEET", True, "8cd9ea6a522f56cd"),
+]
+
+
+@pytest.mark.parametrize("scn,seed,failures,mode,want", GOLDEN_REMAINING)
+def test_remaining_estimator_traces_pinned(scn, seed, failures, mode, want):
+    """``estimator="remaining"`` (set explicitly, not defaulted) across
+    scenario x seed x failures x job_ids must reproduce the pre-estimator
+    traces exactly — proving the speed-model factoring and the
+    reservation overlay changed no behaviour when the estimator is off."""
+    scenario = dc.replace(SCENARIOS[scn], job_ids=mode,
+                          estimator="remaining")
+    sim = Simulator(paper_cluster(), scenario, seed=seed)
+    if failures:
+        sim.failures = [(200.0, "node0", 300.0), (450.0, "node1", 200.0)]
+    done = sim.run(exp2_subs(seed))
+    assert trace_hash(sim, done) == want
+
+
+@pytest.mark.parametrize("scn,failures,want", GOLDEN_REMAINING_FLEET)
+def test_remaining_estimator_fleet_traces_pinned(scn, failures, want):
+    subs = poisson_heavy_traffic(100, 64, seed=3, unique_names=False)
+    scenario = dc.replace(SCENARIOS[scn], estimator="remaining")
+    sim = Simulator(small_fleet(16), scenario, seed=0)
+    if failures:
+        sim.failures = [(150.0, "h3", 200.0), (400.0, "h7", 100.0)]
+    done = sim.run(list(subs))
+    assert trace_hash(sim, done) == want
+
+
 def test_explicit_fifo_equals_default_queue():
     """``queue="fifo"`` and the default ``queue=None`` are one discipline."""
     scn = dc.replace(SCENARIOS["CM_G_TG"], queue="fifo")
