@@ -1,0 +1,222 @@
+"""Resilience-policy benchmark: goodput and wasted work vs fault rate.
+
+Drives the heavy-traffic fleet workload (with a fraction of elastic
+gangs) through the stochastic fault injector (``repro.core.faults``) at a
+sweep of per-node MTBFs, comparing resilience policies on the same trace:
+
+* ``naive``       — the pre-fault baseline semantics: hard kill-and-
+                    requeue, no backoff, no drain, no Daly, no shrink;
+* ``retry``       — bounded retries with exponential backoff + jitter +
+                    failure-domain blacklist;
+* ``drain``       — retry plus cordon/drain-grace on maintenance faults;
+* ``daly``        — retry plus Young/Daly per-job checkpoint intervals;
+* ``resilient``   — everything on, including elastic gang shrinking.
+
+Per (policy, MTBF, seed) the run records:
+
+* **goodput** — completed useful slot-seconds / (makespan x fleet slots);
+* **wasted work** — checkpoint-rework slot-seconds (``perf["rework_s"]``)
+  and its fraction of useful work;
+* mean response time, completions, retry-budget failures, and the fault
+  engine's lifecycle counters.
+
+The acceptance property (checked and recorded in the JSON): the full
+``resilient`` policy beats ``naive`` on *both* goodput and wasted work
+at >= 2 of the swept fault rates.
+
+  python -m benchmarks.faults [--smoke] [--seeds N] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.core.cluster import Cluster, Node
+from repro.core.faults import FaultConfig, ResiliencePolicy
+from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
+from repro.core.simulator import Simulator
+
+# a coarse scenario-wide checkpoint interval, so the Young/Daly per-job
+# stamp has something meaningful to beat at high fault rates
+CKPT_INTERVAL = 300.0
+ELASTIC_FRAC = 0.35
+HOSTS_PER_POD = 8
+
+FULL = {"hosts": 32, "jobs": 280, "seeds": 3,
+        "mtbfs": (30_000.0, 9_000.0, 3_500.0)}
+SMOKE = {"hosts": 16, "jobs": 80, "seeds": 1, "mtbfs": (9_000.0,)}
+
+
+def fleet(n_hosts: int) -> Cluster:
+    """4-slot hosts in pods of HOSTS_PER_POD (the correlated-failure
+    blast radius)."""
+    return Cluster([Node(f"h{i}", n_slots=4, n_domains=1,
+                         pod=i // HOSTS_PER_POD)
+                    for i in range(n_hosts)])
+
+
+def fault_config(mtbf: float) -> FaultConfig:
+    return FaultConfig(node_mtbf=mtbf, dist="weibull", weibull_shape=0.9,
+                       p_transient=0.45, p_permanent=0.02, p_degrade=0.23,
+                       p_maintenance=0.30, repair_time=400.0,
+                       degrade_factor=0.45, degrade_time=1_200.0,
+                       domain_mtbf=10.0 * mtbf, domain_repair=600.0)
+
+
+def policies():
+    """The compared resilience policies (naive = pre-fault semantics)."""
+    full = ResiliencePolicy(max_retries=8)
+    return [
+        ("naive", ResiliencePolicy.naive()),
+        ("retry", dataclasses.replace(full, daly=False, drain=False,
+                                      elastic_shrink=False)),
+        ("drain", dataclasses.replace(full, daly=False,
+                                      elastic_shrink=False)),
+        ("daly", dataclasses.replace(full, drain=False,
+                                     elastic_shrink=False)),
+        ("resilient", full),
+    ]
+
+
+def run_once(n_hosts: int, n_jobs: int, seed: int, mtbf: float,
+             pol: ResiliencePolicy, pol_name: str) -> dict:
+    cluster = fleet(n_hosts)
+    total_slots = cluster.total_slots
+    subs = poisson_heavy_traffic(n_jobs, total_slots, seed=seed,
+                                 elastic_frac=ELASTIC_FRAC)
+    scn = dataclasses.replace(SCENARIOS["FLEET"],
+                              name=f"FLEET_FAULTS_{pol_name}",
+                              ckpt_interval=CKPT_INTERVAL,
+                              faults=fault_config(mtbf), resilience=pol)
+    sim = Simulator(cluster, scn, seed=seed)
+    t0 = time.perf_counter()
+    done = sim.run(subs)
+    wall = time.perf_counter() - t0
+    makespan = Simulator.makespan(done) if done else 1.0
+    useful = sum(j.job.base_runtime * j.gran.n_tasks for j in done)
+    wasted = sim.perf["rework_s"]
+    p = sim.perf
+    return {
+        "seed": seed,
+        "completed": len(done),
+        "failed": len(sim.failed),
+        "unschedulable": len(sim.unschedulable),
+        "events": sim.n_events,
+        "wall_s": round(wall, 3),
+        "sim_makespan_s": round(makespan, 1),
+        "goodput": round(useful / (makespan * total_slots), 4),
+        "wasted_slot_s": round(wasted, 1),
+        "wasted_frac": round(wasted / useful, 4) if useful else 0.0,
+        "mean_response_s": round(
+            sum(j.response_time for j in done) / len(done), 1)
+        if done else None,
+        "node_faults": p["node_faults"],
+        "domain_faults": p["domain_faults"],
+        "fault_kills": p["fault_kills"], "retries": p["retries"],
+        "cordons": p["cordons"], "drains": p["drains"],
+        "degrades": p["degrades"], "shrinks": p["shrinks"],
+    }
+
+
+def run(csv_rows=None, smoke: bool = False, seeds: int = None,
+        out_path: str = None):
+    cfg = SMOKE if smoke else FULL
+    n_seeds = seeds if seeds is not None else cfg["seeds"]
+    if out_path is None:
+        out_path = ("BENCH_faults_smoke.json" if smoke
+                    else "BENCH_faults.json")
+    print("\n== Resilience policies under the stochastic fault injector ==")
+    print(f"   {cfg['hosts']} hosts x 4 slots (pods of {HOSTS_PER_POD}), "
+          f"{cfg['jobs']} jobs, {ELASTIC_FRAC:.0%} elastic, "
+          f"MTBF sweep {[int(m) for m in cfg['mtbfs']]}, {n_seeds} seed(s)")
+    results = []
+    summary: dict = {}
+    for mtbf in cfg["mtbfs"]:
+        summary[str(int(mtbf))] = {}
+        for pol_name, pol in policies():
+            rows = [run_once(cfg["hosts"], cfg["jobs"], seed, mtbf, pol,
+                             pol_name) for seed in range(n_seeds)]
+            for r in rows:
+                r["policy"], r["mtbf"] = pol_name, mtbf
+            results.extend(rows)
+            n = len(rows)
+            resp = [r["mean_response_s"] for r in rows
+                    if r["mean_response_s"] is not None]
+            s = {
+                "goodput": round(sum(r["goodput"] for r in rows) / n, 4),
+                "wasted_slot_s": round(
+                    sum(r["wasted_slot_s"] for r in rows) / n, 1),
+                "wasted_frac": round(
+                    sum(r["wasted_frac"] for r in rows) / n, 4),
+                "mean_response_s": round(sum(resp) / len(resp), 1)
+                if resp else None,
+                "completed": round(
+                    sum(r["completed"] for r in rows) / n, 1),
+                "failed": round(sum(r["failed"] for r in rows) / n, 1),
+                "fault_kills": round(
+                    sum(r["fault_kills"] for r in rows) / n, 1),
+                "shrinks": round(sum(r["shrinks"] for r in rows) / n, 1),
+            }
+            summary[str(int(mtbf))][pol_name] = s
+            print(f"  mtbf={int(mtbf):6d}s {pol_name:10s} "
+                  f"goodput={s['goodput']:.4f} "
+                  f"waste={s['wasted_slot_s']:9.1f} "
+                  f"({100 * s['wasted_frac']:5.2f}%) "
+                  f"resp={s['mean_response_s']} "
+                  f"done={s['completed']:.0f} fail={s['failed']:.0f} "
+                  f"shrinks={s['shrinks']:.0f}")
+            if csv_rows is not None:
+                csv_rows.append((
+                    f"faults_{pol_name}_mtbf{int(mtbf)}",
+                    s["mean_response_s"] or 0.0,
+                    f"goodput={s['goodput']};"
+                    f"wasted_frac={s['wasted_frac']}"))
+    # acceptance: resilient beats naive on goodput AND wasted work at
+    # >= 2 fault rates (>= 1 in the reduced smoke sweep)
+    wins = []
+    for mtbf in cfg["mtbfs"]:
+        s = summary[str(int(mtbf))]
+        wins.append({
+            "mtbf": mtbf,
+            "goodput_naive": s["naive"]["goodput"],
+            "goodput_resilient": s["resilient"]["goodput"],
+            "wasted_naive": s["naive"]["wasted_slot_s"],
+            "wasted_resilient": s["resilient"]["wasted_slot_s"],
+            "win": (s["resilient"]["goodput"] > s["naive"]["goodput"]
+                    and s["resilient"]["wasted_slot_s"]
+                    < s["naive"]["wasted_slot_s"]),
+        })
+    need = 1 if smoke else 2
+    n_wins = sum(1 for w in wins if w["win"])
+    acceptance = {"per_rate": wins, "wins": n_wins, "need": need,
+                  "ok": n_wins >= need}
+    print(f"  acceptance: resilient beats naive on goodput+waste at "
+          f"{n_wins}/{len(wins)} rates (need >= {need}) "
+          f"({'OK' if acceptance['ok'] else 'FAIL'})")
+    payload = {"smoke": smoke,
+               "config": {**{k: v for k, v in cfg.items() if k != 'mtbfs'},
+                          "seeds": n_seeds, "mtbfs": list(cfg["mtbfs"]),
+                          "ckpt_interval": CKPT_INTERVAL,
+                          "elastic_frac": ELASTIC_FRAC},
+               "results": results, "summary": summary,
+               "acceptance": acceptance}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep for CI smoke")
+    ap.add_argument("--seeds", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, seeds=args.seeds, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

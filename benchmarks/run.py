@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV at the end (harness contract) and
 mirrors the rows into ``BENCH_sched.json`` so perf trajectory is machine-
 readable across PRs.
 
-  python -m benchmarks.run [--only exp1|exp2|exp3|sched|backfill|roofline|sim_scale]
+  python -m benchmarks.run [--only exp1|exp2|exp3|sched|backfill|faults|roofline|sim_scale]
                            [--smoke]
 
 ``--smoke`` runs a reduced sweep: jobs that support it (sched, sim_scale)
@@ -16,7 +16,7 @@ import inspect
 import json
 
 
-SMOKE_JOBS = ("sched", "sim_scale", "preempt", "backfill")
+SMOKE_JOBS = ("sched", "sim_scale", "preempt", "backfill", "faults")
 
 
 def main() -> None:
@@ -33,12 +33,13 @@ def main() -> None:
                               else "BENCH_sched.json")
     csv_rows = []
     from benchmarks import (backfill, exp1_single_type, exp2_mixed,
-                            exp3_frameworks, preempt, roofline,
+                            exp3_frameworks, faults, preempt, roofline,
                             sched_efficiency, sim_scale)
     jobs = {"exp1": exp1_single_type.run, "exp2": exp2_mixed.run,
             "exp3": exp3_frameworks.run, "sched": sched_efficiency.run,
             "backfill": backfill.run, "preempt": preempt.run,
-            "roofline": roofline.run, "sim_scale": sim_scale.run}
+            "faults": faults.run, "roofline": roofline.run,
+            "sim_scale": sim_scale.run}
     for name, fn in jobs.items():
         if args.only and args.only != name:
             continue

@@ -72,14 +72,27 @@ def _write(path: str, host_tree, step: int, keep: int) -> str:
     for i, leaf in enumerate(leaves):
         arr = np.asarray(leaf)
         fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        # per-leaf atomicity: write to a .part file, fsync, then rename —
+        # an interrupted write can never leave a truncated leaf under the
+        # final name (the directory-level os.replace below guards the
+        # commit; this guards every file inside it)
+        part = os.path.join(tmp, fname + ".part")
+        with open(part, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(part, os.path.join(tmp, fname))
         with open(os.path.join(tmp, fname), "rb") as f:
             crc = zlib.crc32(f.read())
         manifest["leaves"].append({
             "file": fname, "path": names[i], "shape": list(arr.shape),
             "dtype": str(arr.dtype), "crc32": crc})
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+    part = os.path.join(tmp, "manifest.json.part")
+    with open(part, "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(part, os.path.join(tmp, "manifest.json"))
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)             # atomic commit
@@ -102,28 +115,43 @@ def latest_step(path: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(path: str, like: Any, step: Optional[int] = None,
-            sharding_fn: Optional[Callable] = None) -> Any:
-    """Load into the structure of ``like``; re-shard via ``sharding_fn``
-    (a function leaf-path -> Sharding) for elastic resume on a new mesh."""
-    step = step if step is not None else latest_step(path)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint under {path}")
-    d = os.path.join(path, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    by_path = {m["path"]: m for m in manifest["leaves"]}
-    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+def _retained_steps(path: str) -> List[int]:
+    if not os.path.isdir(path):
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(path)
+                  if d.startswith("step_") and not d.endswith(".tmp"))
+
+
+def _load_step(d: str, like: Any,
+               sharding_fn: Optional[Callable]) -> Any:
+    """Load one committed step directory, verifying every leaf.  Raises
+    ``IOError`` on any corruption or truncation (missing file, bad crc,
+    unreadable npy, short read, malformed manifest)."""
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_path = {m["path"]: m for m in manifest["leaves"]}
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        raise IOError(f"unreadable manifest in {d}: {e}") from e
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for kp, leaf in flat:
         name = jax.tree_util.keystr(kp)
-        meta = by_path[name]
+        meta = by_path.get(name)
+        if meta is None:
+            raise IOError(f"checkpoint {d} is missing leaf {name}")
         fpath = os.path.join(d, meta["file"])
-        with open(fpath, "rb") as f:
-            raw = f.read()
+        try:
+            with open(fpath, "rb") as f:
+                raw = f.read()
+        except OSError as e:
+            raise IOError(f"unreadable leaf {fpath} ({name}): {e}") from e
         if zlib.crc32(raw) != meta["crc32"]:
             raise IOError(f"checkpoint corruption in {fpath} ({name})")
-        arr = np.load(fpath)
+        try:
+            arr = np.load(fpath)
+        except (OSError, ValueError, EOFError) as e:
+            raise IOError(f"truncated leaf {fpath} ({name}): {e}") from e
         assert list(arr.shape) == list(leaf.shape), \
             f"{name}: ckpt {arr.shape} vs model {leaf.shape}"
         target = arr.astype(leaf.dtype)
@@ -132,3 +160,28 @@ def restore(path: str, like: Any, step: Optional[int] = None,
         else:
             out.append(jnp.asarray(target))
     return jax.tree_util.tree_unflatten(jax.tree.structure(like), out)
+
+
+def restore(path: str, like: Any, step: Optional[int] = None,
+            sharding_fn: Optional[Callable] = None) -> Any:
+    """Load into the structure of ``like``; re-shard via ``sharding_fn``
+    (a function leaf-path -> Sharding) for elastic resume on a new mesh.
+
+    Resilient to torn checkpoints: if the chosen step is corrupt or
+    truncated (crc mismatch, unreadable leaf/manifest), restore falls
+    back to the next older retained step instead of raising — a resumed
+    job loses one checkpoint interval, not its whole history.  Raises
+    only when every retained candidate fails."""
+    steps = _retained_steps(path)
+    if step is not None:
+        steps = [s for s in steps if s <= step]
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint under {path}")
+    last_err: Optional[Exception] = None
+    for s in reversed(steps):
+        d = os.path.join(path, f"step_{s:08d}")
+        try:
+            return _load_step(d, like, sharding_fn)
+        except IOError as e:
+            last_err = e
+    raise IOError(f"no intact checkpoint under {path}: {last_err}")

@@ -57,7 +57,26 @@ with no knowledge of why they were shaped that way:
   overlay (O(W log W) per gang), and EASY reservations are projected
   lazily from the engine's finish heap (per-phase counters in
   ``Simulator.perf`` attribute the remaining per-event cost, including
-  preemption counts and wasted work).
+  preemption counts and wasted work);
+* ``faults`` — the fault model + resilience subsystem, spanning both
+  layers.  Infrastructure side: a seeded stochastic injector (per-node
+  exponential/Weibull MTBF, correlated whole-domain failures, degraded
+  nodes threaded through ``job_speed`` as a scale factor) drives a node
+  **lifecycle contract**: ``healthy -> cordoned (draining) -> down ->
+  recovering`` (or ``-> dead`` for permanent faults).  Cordoned nodes
+  are excluded from placement via the reservation-overlay contract
+  above — never by mutating ``Node.used`` — and draining gangs get a
+  grace window to finish or reach a checkpoint boundary before
+  teardown.  Application side: a per-scenario
+  :class:`~repro.core.faults.ResiliencePolicy` gives fault-killed gangs
+  retry budgets with exponential backoff + jitter, failure-domain
+  avoidance on restart, Young/Daly-optimal per-job checkpoint intervals
+  (``JobRun.ckpt_interval``, honoured by every checkpoint-quantized
+  teardown), and elastic gang shrinking at checkpoint boundaries
+  (``Workload.elastic``).  The estimator's predictions inflate by the
+  expected rework under the active fault model.  ``Scenario.faults is
+  None`` (the default) removes the subsystem entirely — every hook is
+  gated on it, keeping fault-free traces byte-identical.
 
 The stack composes freely — any queue discipline over any placement
 policy (``Scenario.queue`` x ``Scenario.placement``), dispatched without
@@ -76,6 +95,8 @@ from repro.core.controller import allocate_tasks, hostfile, make_workers
 from repro.core.estimates import (ESTIMATORS, ContentionEstimator,
                                   RemainingEstimator, RuntimeEstimator,
                                   job_speed, make_estimator)
+from repro.core.faults import (FaultConfig, FaultEngine, ResiliencePolicy,
+                               make_faults)
 from repro.core.planner import Granularity, select_granularity
 from repro.core.policies import (POLICIES, ConservativeBackfillPolicy,
                                  DefaultPolicy, EasyBackfillPolicy,
@@ -94,6 +115,7 @@ __all__ = ["Cluster", "Node", "fleet_cluster", "hetero_cluster",
            "paper_cluster", "allocate_tasks", "hostfile", "make_workers",
            "ESTIMATORS", "RuntimeEstimator", "RemainingEstimator",
            "ContentionEstimator", "job_speed", "make_estimator",
+           "FaultConfig", "FaultEngine", "ResiliencePolicy", "make_faults",
            "Granularity", "select_granularity", "POLICIES",
            "PlacementPolicy", "DefaultPolicy", "TaskGroupPolicy",
            "EasyBackfillPolicy", "ConservativeBackfillPolicy",

@@ -77,14 +77,17 @@ def mem_gran_factor(p, affinity: bool, tpw: int) -> float:
 
 def job_speed(p, affinity: bool, prof: Profile, tpw: int, n_nodes: int,
               n_workers: int, node_loads: Iterable[Tuple[float, float]],
-              sharing: int) -> float:
+              sharing: int, scale: float = 1.0) -> float:
     """Relative execution speed (<= 1) of one job — pure.
 
     ``node_loads`` yields ``(mem demand, bandwidth)`` per node the job
     occupies (consumed only for memory-class jobs); ``sharing`` is the
     pre-clamped count of co-resident jobs (read only without affinity —
-    pass 0 when ``affinity`` is set).  The arithmetic is exactly the
-    pre-factoring ``Simulator._speed`` body, so the engine's golden
+    pass 0 when ``affinity`` is set).  ``scale`` is the fault engine's
+    multiplicative factor (degraded nodes, elastic-shrink width,
+    checkpoint overhead — see ``faults.FaultEngine.speed_scale``); the
+    default 1.0 divides out exactly, so the arithmetic is the
+    pre-factoring ``Simulator._speed`` body and the engine's golden
     traces pin this function too.
     """
     f = 1.0
@@ -105,7 +108,7 @@ def job_speed(p, affinity: bool, prof: Profile, tpw: int, n_nodes: int,
             f *= p.net_multiworker
         if n_nodes > 1:
             f *= 1.0 + p.net_internode * (n_nodes - 1)
-    return 1.0 / f
+    return scale / f
 
 
 # --------------------------------------------------------------------------
@@ -208,11 +211,21 @@ class ContentionEstimator(RuntimeEstimator):
             min(p.share_cap, len(sim.running))
         speed = job_speed(p, sim.sc.affinity, prof, gran.tasks_per_worker,
                           n_nodes, gran.n_workers, node_loads, sharing)
-        return jr.remaining / speed
+        r = jr.remaining / speed
+        # expected-rework inflation under the active fault model: failures
+        # cost (on average) half a checkpoint interval each, so a longer
+        # run on more nodes is predicted proportionally longer — backfill
+        # stops trusting estimates the fault rate will falsify
+        if sim.faults is not None:
+            r *= 1.0 + sim.faults.rework_inflation(jr)
+        return r
 
     def runtime_placed(self, jr) -> float:
         sim = self.sim
-        return jr.remaining / sim._speed(jr, sim._mem_load_live)
+        r = jr.remaining / sim._speed(jr, sim._mem_load_live)
+        if sim.faults is not None:
+            r *= 1.0 + sim.faults.rework_inflation(jr)
+        return r
 
 
 ESTIMATORS: Dict[str, type] = {

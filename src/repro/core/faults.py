@@ -1,0 +1,641 @@
+"""Fault model + resilience subsystem (the robustness layer).
+
+At fleet scale failures are the steady state, not the exception: the
+engine's scripted ``Simulator.failures`` list (hard kill, full-gang
+requeue) models a demo, not a datacenter.  This module adds the missing
+layer across the stack:
+
+**Infrastructure** — a seeded stochastic injector draws per-node fault
+times from an exponential or Weibull MTBF distribution and classifies
+each fault:
+
+* *transient* — the node goes down, every resident gang is torn down,
+  and the node returns after a (jittered) repair time;
+* *permanent* — the node never returns (the fleet shrinks);
+* *degraded* — the node keeps running but at a fraction of its speed
+  (threaded through the pure ``estimates.job_speed`` as a scale factor),
+  the brown-out failure mode real fleets see far more often than clean
+  crashes;
+* *maintenance* — the node is **cordoned** first: excluded from new
+  placement via the reserved-capacity overlay contract (never by
+  mutating ``Node.used``), while resident gangs get a **drain grace
+  window** to finish or reach a checkpoint boundary before teardown.
+
+Correlated failures take down a whole affinity domain (``Node.pod``) at
+once — the switch/PDU/rack blast radius that independent per-node draws
+cannot produce.
+
+Node lifecycle::
+
+    healthy --fault--> down --repair--> healthy          (transient)
+    healthy --fault--> dead                              (permanent)
+    healthy --fault--> degraded --degrade_time--> healthy
+    healthy --fault--> cordoned (draining) --grace--> down --> healthy
+
+The engine owns its own time-ordered event heap (faults, recoveries,
+drain deadlines, degrade expiries, retry releases); the simulator merges
+``next_time()`` into its event horizon and calls ``process_due`` in both
+event loops, so the heap loop and the legacy full-rescan loop stay
+trace-equivalent under any fault storm.
+
+**Application** — a per-scenario :class:`ResiliencePolicy` decides what
+happens to the gangs a fault kills:
+
+* retry budgets with exponential backoff + jitter (a killed gang
+  re-enters the queue only after its backoff expires; budget exhaustion
+  moves it to ``Simulator.failed``);
+* failure-domain avoidance: the next attempt blacklists the failed node
+  (or the whole failed domain) through the same reserved-capacity
+  overlay placement reads — lifted automatically when it would make the
+  gang unplaceable;
+* Young/Daly-optimal per-job checkpoint intervals derived from the
+  fleet MTBF (``tau = sqrt(2 * delta * MTBF_job)``, ``MTBF_job =
+  node_mtbf / n_nodes``), stamped at submit onto ``JobRun
+  .ckpt_interval`` and honoured by every checkpoint-quantized teardown
+  (node failure, preemption, victim costing) plus a ``ck/(ck+delta)``
+  steady-state overhead in the speed model — the classic rework vs
+  checkpoint-cost trade;
+* graceful degradation: *elastic* gangs (``Workload.elastic``) shrink at
+  a checkpoint boundary on partial failure — surviving workers absorb
+  the lost workers' tasks at proportionally reduced speed — instead of
+  losing the whole gang's progress.
+
+With ``Scenario.faults`` left ``None`` the subsystem is entirely absent
+(``make_faults`` returns ``None`` and every engine hook is gated on it),
+so all pre-fault golden trace hashes are byte-identical by construction.
+
+Termination: the injector only matters while work remains, and two
+guards make every run finite even under adversarial configurations — a
+*stall guard* quiesces injection after a bounded number of fault events
+fired while nothing was running (a persistent total outage cannot
+generate recovery events forever), and the simulator's deadlock break
+consults :meth:`FaultEngine.can_make_progress`, which is ``True`` only
+while a retry is pending or returning capacity could actually fit a
+queued gang on the intrinsic (non-dead) fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+import random
+from typing import Dict, List, Optional, Set
+
+from repro.core.profiles import MEM_WEIGHT
+
+
+# --------------------------------------------------------------------------
+# configuration
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Stochastic fault injector parameters (infrastructure layer).
+
+    ``node_mtbf`` is the per-node mean time between faults in seconds
+    (<= 0 disables node faults); ``dist`` selects the inter-fault
+    distribution (``"exponential"`` or ``"weibull"`` — shape < 1 models
+    the infant-mortality/burstiness real failure traces show).  The
+    ``p_*`` weights classify each fault (normalized internally).
+    ``domain_mtbf`` > 0 adds correlated whole-domain (``Node.pod``)
+    failures on top of the independent per-node draws.
+    """
+    node_mtbf: float = 20_000.0
+    dist: str = "exponential"          # "exponential" | "weibull"
+    weibull_shape: float = 0.7
+    p_transient: float = 0.55
+    p_permanent: float = 0.05
+    p_degrade: float = 0.20
+    p_maintenance: float = 0.20
+    repair_time: float = 600.0
+    repair_jitter: float = 0.5         # repair ~ U[1-j, 1+j] * repair_time
+    degrade_factor: float = 0.5        # degraded node's speed multiplier
+    degrade_time: float = 1_800.0
+    domain_mtbf: float = 0.0           # correlated pod-level faults (0=off)
+    domain_repair: float = 900.0
+    horizon: Optional[float] = None    # stop injecting after this sim time
+
+
+@dataclasses.dataclass(frozen=True)
+class ResiliencePolicy:
+    """What happens to the gangs a fault kills (application layer)."""
+    max_retries: int = 5
+    backoff_base: float = 30.0         # seconds; 0 = immediate requeue
+    backoff_factor: float = 2.0
+    backoff_jitter: float = 0.25       # delay *= 1 + U[0,1) * jitter
+    blacklist: bool = True             # avoid the failed node/domain next
+    daly: bool = True                  # Young/Daly per-job ckpt interval
+    ckpt_cost: float = 5.0             # delta: seconds per checkpoint
+    drain: bool = True                 # honour cordon + drain grace
+    drain_grace: float = 180.0
+    elastic_shrink: bool = True        # shrink elastic gangs on part-fail
+
+    @staticmethod
+    def naive() -> "ResiliencePolicy":
+        """The baseline every pre-fault scenario implicitly ran: hard
+        kill-and-requeue, no backoff, no avoidance, no Daly, no drain,
+        no shrink — and an unbounded retry budget."""
+        return ResiliencePolicy(max_retries=1_000_000, backoff_base=0.0,
+                                backoff_jitter=0.0, blacklist=False,
+                                daly=False, drain=False,
+                                elastic_shrink=False)
+
+
+def make_faults(sim) -> Optional["FaultEngine"]:
+    """Resolve a simulator's scenario to a fault engine, or ``None`` when
+    the injector is off (``Scenario.faults is None``) — the gate every
+    engine hook in the simulator/policies/estimator checks, keeping the
+    fault-free paths byte-identical to the pre-fault code."""
+    if sim.sc.faults is None:
+        return None
+    return FaultEngine(sim, sim.sc.faults,
+                       sim.sc.resilience or ResiliencePolicy())
+
+
+# engine event kinds (time-ordered heap entries: (t, seq, kind, payload))
+_FAULT = "fault"
+_DOMAIN = "domain-fault"
+_RECOVER = "recover"
+_DRAIN = "drain-kill"
+_DEGRADE_END = "degrade-end"
+_RETRY = "retry"
+
+# lifecycle states (absent from the map = "healthy")
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+CORDONED = "cordoned"       # draining: placement-excluded, grace running
+DOWN = "down"               # transient/maintenance outage, will recover
+DEAD = "dead"               # permanent: never recovers
+
+
+class FaultEngine:
+    """Stochastic fault injector + node lifecycle + resilience policy
+    for one simulator instance.  All randomness comes from an own seeded
+    stream (derived from the simulator seed), so fault schedules are
+    reproducible and never perturb placement RNG draws."""
+
+    def __init__(self, sim, cfg: FaultConfig, pol: ResiliencePolicy):
+        self.sim = sim
+        self.cfg = cfg
+        self.pol = pol
+        self.rng = random.Random((sim._base_seed << 16) ^ 0xFA17)
+        self.events: List[tuple] = []
+        self._eseq = 0
+        self.state: Dict[str, str] = {}        # name -> lifecycle state
+        self.cordoned: Dict[str, float] = {}   # name -> drain deadline
+        self.degraded: Dict[str, float] = {}   # name -> speed factor
+        self._orig_slots: Dict[str, int] = {}  # down/dead nodes' capacity
+        self._in_backoff = 0                   # pending retry releases
+        self._cap_events = 0                   # pending recover/drain evts
+        # stall guard: quiesce injection after this many fault events in a
+        # row fired while nothing was running (bounds every run even when
+        # a never-fitting queue would otherwise see faults forever)
+        self._stall = 0
+        self._stall_limit = 4 * len(sim.cluster.nodes) + 64
+        self._quiesced = False
+        # normalized fault-kind cumulative thresholds
+        ps = [max(0.0, cfg.p_transient), max(0.0, cfg.p_permanent),
+              max(0.0, cfg.p_degrade), max(0.0, cfg.p_maintenance)]
+        tot = sum(ps) or 1.0
+        acc = 0.0
+        self._kind_cdf = []
+        for p, kind in zip(ps, ("transient", "permanent", "degrade",
+                                "maintenance")):
+            acc += p / tot
+            self._kind_cdf.append((acc, kind))
+        # initial schedule: one pending fault per node, one per domain
+        if cfg.node_mtbf > 0:
+            for n in sim.cluster.nodes:
+                self._schedule(self._gap(cfg.node_mtbf), _FAULT, n.name)
+        if cfg.domain_mtbf > 0:
+            for pod in sorted({n.pod for n in sim.cluster.nodes}):
+                self._schedule(self._gap(cfg.domain_mtbf), _DOMAIN, pod)
+
+    # ---------------- event heap ------------------------------------------
+    def _schedule(self, t: float, kind: str, payload):
+        if self.cfg.horizon is not None and kind in (_FAULT, _DOMAIN) \
+                and t > self.cfg.horizon:
+            return
+        self._eseq += 1
+        heapq.heappush(self.events, (t, self._eseq, kind, payload))
+        if kind in (_RECOVER, _DRAIN):
+            self._cap_events += 1
+        elif kind == _RETRY:
+            self._in_backoff += 1
+
+    def _gap(self, mean: float) -> float:
+        if self.cfg.dist == "weibull":
+            shape = self.cfg.weibull_shape
+            scale = mean / math.gamma(1.0 + 1.0 / shape)
+            return self.rng.weibullvariate(scale, shape)
+        return self.rng.expovariate(1.0 / mean)
+
+    def next_time(self) -> Optional[float]:
+        return self.events[0][0] if self.events else None
+
+    def work_pending(self) -> bool:
+        """Jobs in backoff: not queued, not running, not done — the event
+        loop must stay alive for their retry releases."""
+        return self._in_backoff > 0
+
+    def can_make_progress(self) -> bool:
+        """Whether waiting on the engine can still unblock admission:
+        a retry is pending, or capacity-restoring events (recoveries,
+        drain deadlines) are in flight *and* some queued gang fits the
+        intrinsic (non-dead, fully-repaired) fleet.  The deadlock break
+        consults this so permanent shrinkage still reports unschedulable
+        gangs instead of waiting forever."""
+        if self._in_backoff:
+            return True
+        if not self._cap_events:
+            return False
+        return any(self._fits_intrinsic(jr) for jr in self.sim.queue)
+
+    def _fits_intrinsic(self, jr) -> bool:
+        total = 0
+        mx = 0
+        for n in self.sim.cluster.nodes:
+            if self.state.get(n.name) == DEAD:
+                continue
+            slots = self._orig_slots.get(n.name, n.n_slots)
+            total += slots
+            if slots > mx:
+                mx = slots
+        return (total >= jr.gran.n_tasks
+                and mx >= jr.gran.tasks_per_worker)
+
+    # ---------------- event processing ------------------------------------
+    def process_due(self, dirty_nodes: Optional[set]):
+        """Fire every engine event with ``t <= sim.now`` (same tolerance
+        as the simulator's failure queue), in time order."""
+        sim = self.sim
+        ev = self.events
+        while ev and ev[0][0] <= sim.now + 1e-12:
+            _, _, kind, payload = heapq.heappop(ev)
+            if kind == _RECOVER or kind == _DRAIN:
+                self._cap_events -= 1
+            elif kind == _RETRY:
+                self._in_backoff -= 1
+            if kind == _FAULT:
+                self._on_fault(payload, dirty_nodes)
+            elif kind == _DOMAIN:
+                self._on_domain_fault(payload, dirty_nodes)
+            elif kind == _RECOVER:
+                self._on_recover(payload, dirty_nodes)
+            elif kind == _DRAIN:
+                self._on_drain_deadline(payload, dirty_nodes)
+            elif kind == _DEGRADE_END:
+                self._on_degrade_end(payload, dirty_nodes)
+            elif kind == _RETRY:
+                self._on_retry(payload)
+
+    def _track_stall(self):
+        if not self.sim.running and self.sim.queue:
+            self._stall += 1
+            if self._stall > self._stall_limit:
+                self._quiesced = True
+        else:
+            self._stall = 0
+
+    def _on_fault(self, name: str, dirty):
+        if self._quiesced:
+            return
+        self._track_stall()
+        sim = self.sim
+        state = self.state.get(name, HEALTHY)
+        if state in (DOWN, DEAD, CORDONED):
+            # nothing to break (down) / teardown already scheduled
+            # (cordoned); permanent losses stop drawing entirely
+            if state != DEAD:
+                self._schedule(sim.now + self._gap(self.cfg.node_mtbf),
+                               _FAULT, name)
+            return
+        sim.perf["node_faults"] += 1
+        u = self.rng.random()
+        kind = self._kind_cdf[-1][1]
+        for edge, k in self._kind_cdf:
+            if u <= edge:
+                kind = k
+                break
+        if kind == "transient":
+            self._take_down(name, self._repair(self.cfg.repair_time),
+                            dirty)
+        elif kind == "permanent":
+            self._take_down(name, None, dirty)
+        elif kind == "degrade":
+            self._degrade(name, dirty)
+        else:                                   # maintenance
+            if self.pol.drain:
+                self._cordon(name, dirty)
+            else:
+                self._take_down(name, self._repair(self.cfg.repair_time),
+                                dirty)
+        if self.state.get(name) != DEAD:
+            self._schedule(sim.now + self._gap(self.cfg.node_mtbf),
+                           _FAULT, name)
+
+    def _on_domain_fault(self, pod: int, dirty):
+        if self._quiesced:
+            return
+        self._track_stall()
+        sim = self.sim
+        members = [n.name for n in sim.cluster.nodes if n.pod == pod]
+        hit = [nm for nm in members
+               if self.state.get(nm, HEALTHY) not in (DOWN, DEAD)]
+        if hit:
+            sim.perf["domain_faults"] += 1
+            repair = self._repair(self.cfg.domain_repair)
+            avoid = set(members)
+            for nm in hit:
+                self.cordoned.pop(nm, None)     # outage trumps draining
+                self._take_down(nm, repair, dirty, avoid=avoid)
+        self._schedule(sim.now + self._gap(self.cfg.domain_mtbf),
+                       _DOMAIN, pod)
+
+    def _repair(self, mean: float) -> float:
+        j = self.cfg.repair_jitter
+        if j <= 0:
+            return mean
+        return mean * (1.0 - j + 2.0 * j * self.rng.random())
+
+    # ---------------- lifecycle transitions --------------------------------
+    def _take_down(self, name: str, repair: Optional[float], dirty,
+                   avoid: Optional[Set[str]] = None):
+        """Kill (or shrink) every resident gang, zero the node's slots,
+        schedule recovery (``repair is None`` = permanent)."""
+        sim = self.sim
+        node = sim.cluster.node(name)
+        victims = sorted(sim._node_jobs.get(name, ()),
+                         key=lambda j: j._run_seq)
+        for jr in victims:
+            self._kill_or_shrink(jr, name, dirty,
+                                 avoid if avoid is not None else {name})
+        self._orig_slots.setdefault(name, node.n_slots)
+        node.n_slots = 0
+        self.degraded.pop(name, None)
+        self.cordoned.pop(name, None)
+        if repair is None:
+            self.state[name] = DEAD
+        else:
+            self.state[name] = DOWN
+            self._schedule(sim.now + repair, _RECOVER, name)
+        sim._cap_ver += 1
+        sim.policy.invalidate_reservation()
+        if dirty is not None:
+            dirty.add(name)
+
+    def _on_recover(self, name: str, dirty):
+        sim = self.sim
+        if self.state.get(name) != DOWN:
+            return                              # superseded (e.g. dead)
+        sim.cluster.node(name).n_slots = self._orig_slots.pop(name)
+        self.state.pop(name, None)
+        sim._cap_ver += 1
+        sim.policy.invalidate_reservation()
+        if dirty is not None:
+            dirty.add(name)
+
+    def _degrade(self, name: str, dirty):
+        sim = self.sim
+        self.state[name] = DEGRADED
+        self.degraded[name] = self.cfg.degrade_factor
+        sim.perf["degrades"] += 1
+        self._schedule(sim.now + self.cfg.degrade_time, _DEGRADE_END, name)
+        # no capacity change, but every finish prediction on the node
+        # moved: cached reservation projections are stale (satellite of
+        # the same bug class the scripted-failure path had)
+        sim.policy.invalidate_reservation()
+        if dirty is not None:
+            dirty.add(name)
+
+    def _on_degrade_end(self, name: str, dirty):
+        if self.state.get(name) != DEGRADED:
+            return                              # superseded by an outage
+        self.degraded.pop(name, None)
+        self.state.pop(name, None)
+        self.sim.policy.invalidate_reservation()
+        if dirty is not None:
+            dirty.add(name)
+
+    def _cordon(self, name: str, dirty):
+        """Maintenance begins: exclude the node from new placement (via
+        the overlay read in ``merge_overlay``) and give resident gangs a
+        grace window to finish or reach a checkpoint boundary."""
+        sim = self.sim
+        deadline = sim.now + max(0.0, self.pol.drain_grace)
+        self.state[name] = CORDONED
+        self.cordoned[name] = deadline
+        sim.perf["cordons"] += 1
+        self._schedule(deadline, _DRAIN, name)
+        sim.policy.invalidate_reservation()
+
+    def _on_drain_deadline(self, name: str, dirty):
+        if self.state.get(name) != CORDONED:
+            return                              # superseded by an outage
+        self.sim.perf["drains"] += 1
+        self._take_down(name, self._repair(self.cfg.repair_time), dirty)
+
+    # ---------------- resilience: kill / shrink / retry --------------------
+    def _kill_or_shrink(self, jr, node_name: str, dirty,
+                        avoid: Set[str]):
+        sim = self.sim
+        pol = self.pol
+        if (pol.elastic_shrink and getattr(jr.job, "elastic", False)
+                and any(w.node != node_name for w in jr.workers)):
+            self._shrink(jr, node_name, dirty)
+            return
+        sim._sync(jr)
+        sim._on_stop(jr, dirty)
+        done_work = jr.job.base_runtime - jr.remaining
+        saved = sim._ckpt_saved(done_work, jr)
+        rework = done_work - saved
+        jr.remaining = jr.job.base_runtime - saved
+        jr.workers = []
+        jr._width_factor = 1.0                 # next attempt: full gang
+        jr.wasted_work += rework
+        jr.retries += 1
+        sim.perf["fault_kills"] += 1
+        sim.perf["rework_s"] += rework * jr.gran.n_tasks
+        if jr.retries > pol.max_retries:
+            sim.failed.append(jr)
+            sim.perf["fault_failed"] += 1
+            return
+        if pol.blacklist:
+            jr._avoid = (jr._avoid or set()) | avoid
+        sim.perf["retries"] += 1
+        delay = 0.0
+        if pol.backoff_base > 0:
+            delay = pol.backoff_base \
+                * pol.backoff_factor ** (jr.retries - 1)
+            if pol.backoff_jitter > 0:
+                delay *= 1.0 + pol.backoff_jitter * self.rng.random()
+        if delay > 0:
+            self._schedule(sim.now + delay, _RETRY, jr)
+        else:
+            sim.discipline.on_requeue(jr)
+            sim.policy.on_enqueue(jr)
+
+    def _on_retry(self, jr):
+        """Backoff expired: the gang re-enters the queue (head, with a
+        fresh aging clock — exactly the failure-requeue semantics)."""
+        sim = self.sim
+        sim.discipline.on_requeue(jr)
+        sim.policy.on_enqueue(jr)
+
+    def _shrink(self, jr, node_name: str, dirty):
+        """Graceful degradation: drop the workers on the failed node at a
+        checkpoint boundary; survivors absorb the lost tasks at
+        proportionally reduced speed (``_width_factor``).  The partial
+        inverse of ``Simulator._on_start`` — only the lost workers'
+        placement is released, shared state stays consistent."""
+        sim = self.sim
+        sim._sync(jr)
+        node = sim.cluster.node(node_name)
+        keep = [w for w in jr.workers if w.node != node_name]
+        lost = [w for w in jr.workers if w.node == node_name]
+        lost_tasks = sum(w.n_tasks for w in lost)
+        for w in lost:
+            if sim.sc.affinity:
+                for d, t in w.domains.items():
+                    node.domain_used[d] -= t
+                w.domains = {}
+            node.used -= w.n_tasks
+            sim.bound.remove(w)
+        w_mem = MEM_WEIGHT.get(jr.job.profile, 0.0)
+        if w_mem and lost_tasks:
+            sim._mem_load_sum -= w_mem * lost_tasks
+            left = sim._mem_load_live.get(node_name, 0.0) \
+                - w_mem * lost_tasks
+            if left:
+                sim._mem_load_live[node_name] = left
+            else:
+                sim._mem_load_live.pop(node_name, None)
+        jobs = sim._node_jobs.get(node_name)
+        if jobs is not None:
+            jobs.discard(jr)
+            if not jobs:
+                del sim._node_jobs[node_name]
+        jr.workers = keep
+        jr._nodes = None                       # recompute from survivors
+        total = jr.gran.n_tasks
+        jr._width_factor *= (total - lost_tasks) / total
+        done_work = jr.job.base_runtime - jr.remaining
+        saved = sim._ckpt_saved(done_work, jr)
+        rework = done_work - saved
+        jr.remaining = jr.job.base_runtime - saved
+        jr.wasted_work += rework
+        jr.shrinks += 1
+        sim.perf["shrinks"] += 1
+        sim.perf["rework_s"] += rework * jr.gran.n_tasks
+        jr._ver += 1                           # heap entry is stale
+        jr._pushed = False
+        sim._cap_ver += 1
+        sim.policy.invalidate_reservation()
+        if dirty is not None:
+            dirty.update(jr.nodes_used)
+            dirty.add(node_name)
+
+    # ---------------- hooks the simulator/policies/estimator read ----------
+    def on_submit(self, jr):
+        """Stamp the Young/Daly-optimal checkpoint interval: ``tau =
+        sqrt(2 * delta * MTBF_job)`` with ``MTBF_job = node_mtbf /
+        n_nodes`` (a synchronous gang fails when any of its nodes
+        does)."""
+        if not self.pol.daly or self.cfg.node_mtbf <= 0:
+            return
+        n_nodes = max(1, min(jr.gran.n_nodes, jr.gran.n_workers))
+        mtbf_job = self.cfg.node_mtbf / n_nodes
+        tau = math.sqrt(2.0 * max(self.pol.ckpt_cost, 1e-9) * mtbf_job)
+        jr.ckpt_interval = max(self.pol.ckpt_cost, tau)
+
+    def on_start(self, jr):
+        """A successful start clears the attempt's blacklist and resets
+        the injector's stall guard (the fleet is making progress)."""
+        jr._avoid = None
+        self._stall = 0
+
+    def merge_overlay(self, jr,
+                      reserve: Optional[Dict[str, int]]
+                      ) -> Optional[Dict[str, int]]:
+        """Compose the lifecycle/blacklist placement exclusions into the
+        reserved-capacity overlay a binder honours: cordoned (draining)
+        nodes are fully withheld, and so are the gang's blacklisted
+        nodes — unless the blacklist would leave no node able to host
+        the gang's widest worker (avoidance must degrade, not deadlock).
+        Returns the merged overlay (or the input unchanged)."""
+        sim = self.sim
+        cluster = sim.cluster
+        excl: Dict[str, int] = {}
+        for name in self.cordoned:
+            f = cluster.node(name).free
+            if f > 0:
+                excl[name] = f
+        avoid = jr._avoid
+        if avoid:
+            need = jr.gran.tasks_per_worker
+            excl_names = set(avoid) | set(self.cordoned)
+            feasible = cluster.count_free_ge(need) if need > 0 else 0
+            blocked = len({nm for nm in excl_names
+                           if cluster.node(nm).free >= need})
+            # lift the blacklist unless the remaining fleet can host the
+            # gang's widest worker AND its full width — a gang that needs
+            # (nearly) every node must be allowed back onto the one that
+            # failed it rather than deadlock
+            free_outside = cluster.free_slots - sum(
+                max(0, cluster.node(nm).free) for nm in excl_names)
+            if feasible > blocked and free_outside >= jr.gran.n_tasks:
+                for name in avoid:
+                    f = cluster.node(name).free
+                    if f > 0:
+                        excl[name] = f
+        if not excl:
+            return reserve
+        merged = dict(reserve) if reserve else {}
+        for name, f in excl.items():
+            if merged.get(name, 0) < f:
+                merged[name] = f
+        return merged
+
+    def cordoned_free(self) -> int:
+        """Free slots currently behind a cordon — capacity the EASY
+        reservation must not count as startable."""
+        cluster = self.sim.cluster
+        return sum(max(0, cluster.node(name).free)
+                   for name in self.cordoned)
+
+    def speed_scale(self, jr, nodes) -> float:
+        """Multiplicative speed factor threaded through the pure
+        ``estimates.job_speed``: degraded-node slowdown (a synchronous
+        gang runs at its slowest node), elastic-shrink width factor, and
+        the steady-state checkpoint overhead ``ck / (ck + delta)``."""
+        s = jr._width_factor
+        if self.degraded:
+            worst = 1.0
+            for node in nodes:
+                f = self.degraded.get(node)
+                if f is not None and f < worst:
+                    worst = f
+            s *= worst
+        ck = jr.ckpt_interval if jr.ckpt_interval is not None \
+            else self.sim.sc.ckpt_interval
+        delta = self.pol.ckpt_cost
+        if ck > 0 and delta > 0:
+            s *= ck / (ck + delta)
+        return s
+
+    def rework_inflation(self, jr) -> float:
+        """Expected rework fraction of a run under the active fault
+        model — the contention estimator multiplies its prediction by
+        ``1 + inflation``: failures arrive at ``n_nodes / node_mtbf``
+        (plus the domain rate), each losing half a checkpoint interval
+        on average."""
+        lam = 0.0
+        if self.cfg.node_mtbf > 0:
+            n_nodes = max(1, min(jr.gran.n_nodes, jr.gran.n_workers))
+            lam += n_nodes / self.cfg.node_mtbf
+        if self.cfg.domain_mtbf > 0:
+            lam += 1.0 / self.cfg.domain_mtbf
+        if lam <= 0:
+            return 0.0
+        ck = jr.ckpt_interval if jr.ckpt_interval is not None \
+            else self.sim.sc.ckpt_interval
+        return min(1.0, lam * 0.5 * max(ck, 0.0))

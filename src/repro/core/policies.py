@@ -130,6 +130,13 @@ class PlacementPolicy:
         (skip the placement attempt without touching any node)."""
         return False
 
+    def invalidate_reservation(self):
+        """Drop any cached reservation projection.  Called by the fault
+        paths (node failure, cordon, degrade) whose effect on predicted
+        finishes or placeability is not captured by the capacity version
+        the cache is keyed on.  Base policies hold no reservation."""
+        pass
+
     def _start(self, jr, placed, dirty_nodes: Optional[set]):
         """Shared start bookkeeping for every admission path: record the
         binding and hand the gang to the simulator.  Queue removal stays
@@ -202,6 +209,8 @@ class DefaultPolicy(PlacementPolicy):
         sim = self.sim
         sim.perf["place_attempts"] += 1
         cluster = sim.cluster
+        if sim.faults is not None:    # cordoned/blacklisted nodes withheld
+            reserve = sim.faults.merge_overlay(jr, reserve)
         keyed = sim.sc.job_ids == "uid"
         workers = make_workers(jr.job, jr.gran, uid=jr.uid)
         # a reserved-capacity overlay seeds the staged map: for this
@@ -314,6 +323,8 @@ class TaskGroupPolicy(PlacementPolicy):
               reserve: Optional[Dict[str, int]] = None):
         sim = self.sim
         sim.perf["place_attempts"] += 1
+        if sim.faults is not None:    # cordoned/blacklisted nodes withheld
+            reserve = sim.faults.merge_overlay(jr, reserve)
         if not use_index:            # legacy: rebuild the gang every attempt
             workers = make_workers(jr.job, jr.gran, uid=jr.uid)
             return TG.schedule_job(sim.cluster, workers, jr.gran.n_groups,
@@ -379,6 +390,9 @@ class EasyBackfillPolicy(PlacementPolicy):
 
     def pre_reject(self, jr, use_index: bool) -> bool:
         return self._binder.pre_reject(jr, use_index)
+
+    def invalidate_reservation(self):
+        self._resv = None
 
     def on_enqueue(self, jr):
         # failure requeues re-enqueue an already-seen JobRun: clear its
@@ -451,6 +465,10 @@ class EasyBackfillPolicy(PlacementPolicy):
         need_total = head.gran.n_tasks
         need_worker = head.gran.tasks_per_worker
         free_total = cluster.free_slots
+        if sim.faults is not None:
+            # free slots behind a cordon are not startable capacity: the
+            # node is draining toward an outage, not toward the head
+            free_total -= sim.faults.cordoned_free()
         cur_max = cluster.max_free()
         shadow = sim.now
         # the per-node component is tracked only when it actually binds:

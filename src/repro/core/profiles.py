@@ -64,6 +64,12 @@ class Workload:
     priority ordering / gang preemption.  The defaults put every job in
     one tenant at class 0 — indistinguishable from the pre-queueing
     behaviour under any discipline's tie-breaks.
+
+    ``elastic`` marks a malleable gang (Kub-style checkpoint/restart
+    elasticity): under the fault engine's ``elastic_shrink`` policy a
+    partial node failure shrinks the gang at a checkpoint boundary —
+    surviving workers absorb the lost tasks at proportionally reduced
+    speed — instead of killing and requeueing the whole gang.
     """
     name: str
     profile: Profile
@@ -73,6 +79,7 @@ class Workload:
     uid: Optional[str] = None    # per-submission identity (K8s job UID)
     tenant: str = "default"      # namespace for fair-share accounting
     priority: int = 0            # priority class (higher = sooner)
+    elastic: bool = False        # malleable gang: may shrink on failure
 
 
 # --- the paper's five benchmarks (HPCC + MiniFE), 16 MPI processes each ----

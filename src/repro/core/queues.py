@@ -143,7 +143,7 @@ class QueueDiscipline:
         sim._sync(jr)
         sim._on_stop(jr, dirty_nodes)
         done_work = jr.job.base_runtime - jr.remaining
-        saved = sim._ckpt_saved(done_work)
+        saved = sim._ckpt_saved(done_work, jr)
         wasted = done_work - saved
         jr.remaining = jr.job.base_runtime - saved
         jr.workers = []
@@ -250,11 +250,13 @@ class PriorityQueue(QueueDiscipline):
         # cheapest-first: wasted slot-seconds if killed now (work since the
         # last checkpoint x gang width); ties newest-admission-first
         # (least sunk work) via the _run_seq stamp — deterministic.
-        ck = sim.sc.ckpt_interval
+        ck_default = sim.sc.ckpt_interval
 
         def cost(jr):
             done = jr.job.base_runtime \
                 - (jr.remaining - (sim.now - jr._synced_t) * jr.speed)
+            ck = jr.ckpt_interval if jr.ckpt_interval is not None \
+                else ck_default
             saved = (done // ck) * ck if ck > 0 else 0.0
             return (done - saved) * jr.gran.n_tasks
 

@@ -18,6 +18,7 @@ from __future__ import annotations
 import random
 from typing import Dict, List, Sequence, Tuple
 
+from repro.core.faults import FaultConfig, ResiliencePolicy
 from repro.core.profiles import Profile, Workload
 from repro.core.simulator import Scenario
 
@@ -107,6 +108,17 @@ SCENARIOS: Dict[str, Scenario] = {
                                          "aging_tau": 1800.0,
                                          "preempt_min_prio": 2,
                                          "preempt_delay": 60.0}),
+    # ---- fault model + resilience (repro.core.faults) --------------------
+    # the fleet under a stochastic fault injector (per-node MTBF draws,
+    # transient/permanent/degraded/maintenance faults, node lifecycle with
+    # cordon + drain) and the full resilience policy: retry budgets with
+    # exponential backoff, failure-domain avoidance, Young/Daly per-job
+    # checkpoint intervals, elastic gang shrinking.  Every scenario above
+    # leaves ``faults=None`` — injector off, traces byte-identical
+    "FLEET_FAULTS": Scenario("FLEET_FAULTS", affinity=True,
+                             policy="granularity", taskgroup=True,
+                             job_ids="uid", faults=FaultConfig(),
+                             resilience=ResiliencePolicy()),
 }
 
 
@@ -134,6 +146,7 @@ def poisson_heavy_traffic(n_jobs: int, cluster_slots: int, seed: int = 0,
                           utilization: float = 1.25,
                           workloads: Sequence[Workload] = FLEET_WORKLOADS,
                           unique_names: bool = True,
+                          elastic_frac: float = 0.0,
                           ) -> List[Tuple[Workload, float]]:
     """Poisson arrival process sized to keep the cluster saturated.
 
@@ -149,6 +162,12 @@ def poisson_heavy_traffic(n_jobs: int, cluster_slots: int, seed: int = 0,
     ``job_ids="name"`` mode; ``unique_names=False`` keeps the raw type
     names — the fleet-realistic shape where only ``job_ids="uid"`` keeps
     concurrent same-type jobs apart.
+
+    ``elastic_frac`` > 0 tags that fraction of arrivals as elastic
+    (malleable) gangs — the jobs the fault engine's ``elastic_shrink``
+    policy may shrink instead of requeue.  The elastic draw is guarded,
+    so the default 0.0 leaves the RNG stream (and every golden trace
+    built on it) untouched.
     """
     import dataclasses
 
@@ -162,8 +181,10 @@ def poisson_heavy_traffic(n_jobs: int, cluster_slots: int, seed: int = 0,
         t += rng.expovariate(rate)
         w = workloads[rng.randrange(len(workloads))]
         name = f"{w.name}.{i}" if unique_names else w.name
+        elastic = elastic_frac > 0.0 and rng.random() < elastic_frac
         subs.append((dataclasses.replace(w, name=name,
-                                         uid=f"{w.name}.{i}"), t))
+                                         uid=f"{w.name}.{i}",
+                                         elastic=elastic), t))
     return subs
 
 

@@ -61,6 +61,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core import estimates as EST
+from repro.core import faults as FLT
 from repro.core import policies as POL
 from repro.core import queues as QD
 from repro.core.cluster import Cluster
@@ -129,6 +130,13 @@ class Scenario:
     # is the seed's optimistic full-speed estimate, pinned byte-identical
     # by the golden trace hashes (see repro.core.estimates)
     estimator: str = "remaining"
+    # fault-model + resilience subsystem (repro.core.faults): ``faults``
+    # is the stochastic injector's FaultConfig (None = injector off —
+    # every fault-engine hook is skipped, so traces stay byte-identical
+    # to the pre-fault engine); ``resilience`` is the ResiliencePolicy
+    # applied to fault-killed gangs (None with faults set = defaults)
+    faults: Optional[FLT.FaultConfig] = None
+    resilience: Optional[FLT.ResiliencePolicy] = None
 
 
 @dataclasses.dataclass(eq=False)         # identity hash: JobRuns live in the
@@ -146,6 +154,11 @@ class JobRun:                            # per-node running-jobs index
     speed: float = 1.0
     preemptions: int = 0                 # times killed by gang preemption
     wasted_work: float = 0.0             # work-seconds lost to preemptions
+    retries: int = 0                     # times killed by a node fault
+    shrinks: int = 0                     # elastic partial-failure shrinks
+    # per-job checkpoint interval (Young/Daly stamp from the fault
+    # engine); None = the scenario-wide ``Scenario.ckpt_interval``
+    ckpt_interval: Optional[float] = None
     # the scenario estimator's finish prediction, stamped at (re)start —
     # accuracy = |predicted - actual| / actual (see benchmarks/backfill.py)
     predicted_finish_t: Optional[float] = None
@@ -161,6 +174,10 @@ class JobRun:                            # per-node running-jobs index
     _nodes: Optional[Dict[str, int]] = dataclasses.field(default=None,
                                                          repr=False)
     _plan: Optional[tuple] = dataclasses.field(default=None, repr=False)
+    # surviving-width speed factor after elastic shrinks (1.0 = full gang)
+    _width_factor: float = dataclasses.field(default=1.0, repr=False)
+    # failure-domain avoidance set for the next attempt (fault engine)
+    _avoid: Optional[set] = dataclasses.field(default=None, repr=False)
 
     @property
     def nodes_used(self) -> Dict[str, int]:
@@ -196,6 +213,8 @@ class Simulator:
         # add/remove, stable iteration order for trace-identical requeues
         self.running: Dict[JobRun, None] = {}
         self.done: List[JobRun] = []
+        # gangs that exhausted their retry budget under the fault engine
+        self.failed: List[JobRun] = []
         self.bound = TG.BoundIndex()
         self.now = 0.0
         self.n_events = 0
@@ -225,7 +244,11 @@ class Simulator:
             "events": 0, "admit_calls": 0, "place_attempts": 0,
             "reservations": 0, "preemptions": 0, "preempt_wasted_s": 0.0,
             "heap_s": 0.0, "admit_s": 0.0,
-            "refresh_s": 0.0, "reserve_s": 0.0, "wall_s": 0.0}
+            "refresh_s": 0.0, "reserve_s": 0.0, "wall_s": 0.0,
+            # fault-engine counters (all zero with the injector off)
+            "node_faults": 0, "domain_faults": 0, "degrades": 0,
+            "cordons": 0, "drains": 0, "fault_kills": 0, "retries": 0,
+            "fault_failed": 0, "shrinks": 0, "rework_s": 0.0}
         # per-node memory bandwidth: None when the fleet is homogeneous
         # (the scalar PerfParams path — zero per-event overhead); else a
         # name -> tasks-at-full-speed map defaulting to the scenario value
@@ -240,6 +263,8 @@ class Simulator:
         self.estimator = EST.make_estimator(self)  # application-layer runtime
         #                                          # predictions (backfill
         #                                          # window, victim costing)
+        self.faults = FLT.make_faults(self)    # fault injector + resilience
+        #                                      # (None = injector off)
 
     # ---------------- submission -----------------------------------------
     def submit(self, job: Workload, t: float):
@@ -264,6 +289,8 @@ class Simulator:
         jr.tenant = job.tenant
         jr.priority = job.priority
         jr._queued_t = t
+        if self.faults is not None:
+            self.faults.on_submit(jr)      # Young/Daly ckpt-interval stamp
         self.discipline.on_submit(jr)
         self.policy.on_enqueue(jr)
 
@@ -317,6 +344,8 @@ class Simulator:
         # re-stamps — accuracy is judged against the final run)
         jr.predicted_finish_t = self.now + self.estimator.runtime_placed(jr)
         self.discipline.on_start(jr)
+        if self.faults is not None:
+            self.faults.on_start(jr)       # clears the attempt's blacklist
         if dirty_nodes is not None:
             dirty_nodes.update(nodes)
 
@@ -449,9 +478,11 @@ class Simulator:
                           for node in nodes]
         else:
             node_loads = ()
+        scale = 1.0 if self.faults is None \
+            else self.faults.speed_scale(jr, nodes)
         return EST.job_speed(p, self.sc.affinity, prof,
                              jr.gran.tasks_per_worker, len(nodes),
-                             len(jr.workers), node_loads, sharing)
+                             len(jr.workers), node_loads, sharing, scale)
 
     def _refresh_speeds(self):
         """Legacy full refresh: every running job, mem load rebuilt."""
@@ -516,22 +547,27 @@ class Simulator:
         perf = self.perf
         pc = time.perf_counter
         t_run = pc()
+        flt = self.faults
         idx = 0
-        while idx < len(pending) or self.queue or self.running:
+        while idx < len(pending) or self.queue or self.running \
+                or (flt is not None and flt.work_pending()):
             t0 = pc()
             self.n_events += 1
             if not self.running and idx >= len(pending) and self.queue \
-                    and not fails:
+                    and not fails \
+                    and (flt is None or not flt.can_make_progress()):
                 # deadlock: head-of-line gang can never be admitted
                 self.unschedulable.extend(self.queue)
                 self.queue.clear()
                 break
             next_sub = pending[idx][1] if idx < len(pending) else None
             next_fail = fails[0][0] if fails else None
+            next_flt = flt.next_time() if flt is not None else None
             while heap and heap[0][3]._ver != heap[0][2]:
                 heapq.heappop(heap)           # drop stale entries
             next_fin = heap[0][0] if heap else None
-            t_next = min(x for x in (next_sub, next_fin, next_fail)
+            t_next = min(x for x in (next_sub, next_fin, next_fail,
+                                     next_flt)
                          if x is not None)
             self.now = t_next
             dirty: set = set()
@@ -566,6 +602,10 @@ class Simulator:
             while fails and fails[0][0] <= self.now + 1e-12:
                 _, node_name, down_for = heapq.heappop(fails)
                 self._fail_node(node_name, down_for, fails, dirty)
+            # stochastic fault-engine events (injected faults, recoveries,
+            # drain deadlines, degrade expiries, retry releases)
+            if flt is not None:
+                flt.process_due(dirty)
             # submissions
             while idx < len(pending) and pending[idx][1] <= self.now + 1e-12:
                 self.submit(pending[idx][0], pending[idx][1])
@@ -592,22 +632,27 @@ class Simulator:
         perf = self.perf
         pc = time.perf_counter
         t_run = pc()
+        flt = self.faults
         idx = 0
-        while idx < len(pending) or self.queue or self.running:
+        while idx < len(pending) or self.queue or self.running \
+                or (flt is not None and flt.work_pending()):
             t0 = pc()
             self.n_events += 1
             if not self.running and idx >= len(pending) and self.queue \
-                    and not fails:
+                    and not fails \
+                    and (flt is None or not flt.can_make_progress()):
                 self.unschedulable.extend(self.queue)
                 self.queue.clear()
                 break
             next_sub = pending[idx][1] if idx < len(pending) else None
             next_fail = fails[0][0] if fails else None
+            next_flt = flt.next_time() if flt is not None else None
             next_fin = None
             if self.running:
                 next_fin = min(self.now + jr.remaining / jr.speed
                                for jr in self.running)
-            t_next = min(x for x in (next_sub, next_fin, next_fail)
+            t_next = min(x for x in (next_sub, next_fin, next_fail,
+                                     next_flt)
                          if x is not None)
             # advance progress
             dt = t_next - self.now
@@ -626,6 +671,8 @@ class Simulator:
             while fails and fails[0][0] <= self.now + 1e-12:
                 _, node_name, down_for = heapq.heappop(fails)
                 self._fail_node(node_name, down_for, fails, None)
+            if flt is not None:
+                flt.process_due(None)
             # submissions
             while idx < len(pending) and pending[idx][1] <= self.now + 1e-12:
                 self.submit(pending[idx][0], pending[idx][1])
@@ -642,11 +689,16 @@ class Simulator:
         perf["events"] = self.n_events
         return self.done
 
-    def _ckpt_saved(self, done_work: float) -> float:
+    def _ckpt_saved(self, done_work: float,
+                    jr: Optional[JobRun] = None) -> float:
         """Work a killed gang resumes with: progress quantized down to the
-        scenario's checkpoint interval (the single source of truth for
-        node-failure teardown, preemption teardown and victim costing)."""
+        checkpoint interval (the single source of truth for node-failure
+        teardown, preemption teardown and victim costing).  A job carrying
+        a Young/Daly stamp (``JobRun.ckpt_interval``) uses its own
+        interval; everyone else uses the scenario's."""
         ck = self.sc.ckpt_interval
+        if jr is not None and jr.ckpt_interval is not None:
+            ck = jr.ckpt_interval
         return (done_work // ck) * ck if ck > 0 else 0.0
 
     # ---------------- fault handling ---------------------------------------
@@ -677,7 +729,8 @@ class Simulator:
             self._sync(jr)
             self._on_stop(jr, dirty_nodes)
             done_work = jr.job.base_runtime - jr.remaining
-            jr.remaining = jr.job.base_runtime - self._ckpt_saved(done_work)
+            jr.remaining = jr.job.base_runtime \
+                - self._ckpt_saved(done_work, jr)
             jr.workers = []
             self.discipline.on_requeue(jr)      # FIFO: resumes at the head
             self.policy.on_enqueue(jr)
@@ -687,6 +740,10 @@ class Simulator:
                                -float(node.n_slots)))
         node.n_slots = 0
         self._cap_ver += 1
+        # a cached backfill reservation projected onto this node (or onto
+        # its victims' finish times) is stale — drop it so the shadow
+        # window is recomputed from the post-failure finish heap
+        self.policy.invalidate_reservation()
 
     # ---------------- metrics ---------------------------------------------
     @staticmethod

@@ -1,0 +1,527 @@
+"""Fault model + resilience subsystem: injector, lifecycle, recovery.
+
+Four layers of guarantees:
+
+* **Faults-off is not a behaviour change**: every pre-fault scenario has
+  ``faults=None`` and the golden trace hashes (including the scripted-
+  failures pins) are byte-identical with the subsystem merely importable.
+* **Lifecycle semantics** (scripted, deterministic): transient outage +
+  recovery, degraded-node slowdown, cordon/drain-grace, correlated
+  whole-domain failure, permanent shrinkage.
+* **Resilience semantics**: Young/Daly stamping, retry-with-backoff
+  timing, budget exhaustion, failure-domain avoidance, elastic shrink.
+* **Fault-storm invariants** (property-style over seeds x configs x both
+  event loops): no job lost, retry budgets respected, free capacity
+  never negative (live capacity-listener check), state drains clean.
+
+Plus the satellite regressions: ``_fail_node`` / engine lifecycle events
+must invalidate cached EASY reservations, and ``ckpt.checkpoint.restore``
+must fall back across torn/corrupt checkpoint steps.
+"""
+import dataclasses as dc
+import hashlib
+import math
+import os
+import random
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import faults as FLT
+from repro.core.cluster import Cluster, Node, paper_cluster
+from repro.core.profiles import PAPER_BENCHMARKS, Profile, Workload
+from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
+from repro.core.simulator import Simulator
+
+
+def small_fleet(n_hosts=16, slots=4, pod_size=None):
+    return Cluster([Node(f"h{i}", n_slots=slots, n_domains=1,
+                         pod=0 if pod_size is None else i // pod_size)
+                    for i in range(n_hosts)])
+
+
+def exp2_subs(seed):
+    rng = random.Random(seed)
+    jobs = [w for w in PAPER_BENCHMARKS.values() for _ in range(4)]
+    rng.shuffle(jobs)
+    times = sorted(rng.uniform(0, 1200) for _ in jobs)
+    return list(zip(jobs, times))
+
+
+def trace_hash(sim, done):
+    jobs = sorted(
+        ((j.job.name, repr(j.submit_t), repr(j.start_t), repr(j.finish_t),
+          tuple(sorted(j.nodes_used.items()))) for j in done),
+        key=lambda t: (t[0], t[1]))
+    uns = sorted((j.job.name, repr(j.submit_t)) for j in sim.unschedulable)
+    return hashlib.sha256(repr((jobs, uns)).encode()).hexdigest()[:16]
+
+
+def scripted_sim(n_hosts=2, slots=4, pol=None, scn_kw=None, **fault_kw):
+    """A simulator whose fault engine fires ONLY hand-scheduled events:
+    the stochastic draws are disabled by clearing the initial heap (the
+    huge MTBF keeps Daly/inflation well-defined), so every lifecycle test
+    is exactly reproducible without touching the injector's RNG."""
+    fault_kw.setdefault("node_mtbf", 1e12)
+    fault_kw.setdefault("repair_jitter", 0.0)
+    sc = dc.replace(SCENARIOS["FLEET_FAULTS"],
+                    faults=FLT.FaultConfig(**fault_kw),
+                    resilience=pol or FLT.ResiliencePolicy(),
+                    **(scn_kw or {}))
+    sim = Simulator(small_fleet(n_hosts, slots), sc, seed=0)
+    sim.faults.events.clear()
+    return sim
+
+
+def inject(sim, t, kind, payload, force_kind=None):
+    if force_kind is not None:
+        sim.faults._kind_cdf = [(1.0, force_kind)]
+    sim.faults._schedule(t, kind, payload)
+
+
+# ----------------------------------------------------------------------
+# faults-off: the subsystem's existence is not a behaviour change
+# ----------------------------------------------------------------------
+def test_prefault_scenarios_have_injector_off():
+    for name, sc in SCENARIOS.items():
+        if name == "FLEET_FAULTS":
+            assert sc.faults is not None
+        else:
+            assert sc.faults is None, f"{name} grew a fault injector"
+    assert Simulator(small_fleet(4), SCENARIOS["CM_G"], seed=0).faults \
+        is None
+    assert Simulator(small_fleet(4), SCENARIOS["FLEET_FAULTS"],
+                     seed=0).faults is not None
+
+
+def test_golden_trace_pinned_with_scripted_failures_injector_off():
+    """The scripted-failure pin from the queueing suite, re-asserted
+    here: the fault subsystem must leave the legacy ``Simulator
+    .failures`` path byte-identical when ``Scenario.faults is None``."""
+    sim = Simulator(paper_cluster(), SCENARIOS["CM_G_TG"], seed=0)
+    sim.failures = [(200.0, "node0", 300.0), (450.0, "node1", 200.0)]
+    done = sim.run(exp2_subs(0))
+    assert trace_hash(sim, done) == "70cd966f876f042a"
+
+
+def test_golden_trace_pinned_failure_free_injector_off():
+    sim = Simulator(paper_cluster(), SCENARIOS["CM_G_TG"], seed=0)
+    done = sim.run(exp2_subs(0))
+    assert trace_hash(sim, done) == "a576e2d104c610df"
+
+
+# ----------------------------------------------------------------------
+# resilience policy: Young/Daly stamping
+# ----------------------------------------------------------------------
+def test_daly_interval_stamped_at_submit():
+    sim = Simulator(small_fleet(8), SCENARIOS["FLEET_FAULTS"], seed=0)
+    done = sim.run([(Workload("j", Profile.CPU, 8, 50.0, uid="j"), 0.0)])
+    jr = done[0]
+    cfg, pol = sim.sc.faults, sim.sc.resilience
+    n = max(1, min(jr.gran.n_nodes, jr.gran.n_workers))
+    tau = math.sqrt(2.0 * pol.ckpt_cost * cfg.node_mtbf / n)
+    assert jr.ckpt_interval == pytest.approx(max(pol.ckpt_cost, tau))
+
+
+def test_daly_off_leaves_interval_unset():
+    pol = FLT.ResiliencePolicy(daly=False)
+    sim = scripted_sim(pol=pol)
+    done = sim.run([(Workload("j", Profile.CPU, 4, 50.0, uid="j"), 0.0)])
+    assert done[0].ckpt_interval is None
+
+
+# ----------------------------------------------------------------------
+# lifecycle: transient outage, degrade, cordon/drain, domain blast
+# ----------------------------------------------------------------------
+def test_transient_fault_kills_recovers_and_retries():
+    pol = FLT.ResiliencePolicy(backoff_base=0.0, daly=False)
+    sim = scripted_sim(pol=pol, repair_time=100.0)
+    for name in ("h0", "h1"):
+        inject(sim, 100.0, FLT._FAULT, name, force_kind="transient")
+    done = sim.run([(Workload("j", Profile.CPU, 8, 300.0, uid="j"), 0.0)])
+    assert len(done) == 1 and not sim.failed
+    jr = done[0]
+    assert jr.retries == 1
+    assert sim.perf["node_faults"] == 2
+    assert sim.perf["fault_kills"] == 1
+    assert jr.finish_t > 300.0          # outage + rework cost showed up
+    # full recovery: both nodes restored, nothing leaked
+    assert [n.n_slots for n in sim.cluster.nodes] == [4, 4]
+    assert sim.cluster.free_slots == sim.cluster.total_slots == 8
+    assert not sim.faults.state and not sim.faults._orig_slots
+
+
+def test_permanent_fault_shrinks_fleet_forever():
+    pol = FLT.ResiliencePolicy(backoff_base=0.0, daly=False)
+    sim = scripted_sim(n_hosts=4, pol=pol)
+    inject(sim, 50.0, FLT._FAULT, "h0", force_kind="permanent")
+    done = sim.run([(Workload("j", Profile.CPU, 16, 200.0, uid="j"), 0.0)])
+    # the 16-task gang needed all 4 hosts; after the permanent loss the
+    # intrinsic fleet can never fit it again -> unschedulable, not a hang
+    assert not done and not sim.failed
+    assert [j.job.name for j in sim.unschedulable] == ["j"]
+    assert sim.faults.state["h0"] == FLT.DEAD
+    assert sim.cluster.node("h0").n_slots == 0
+    assert sim.cluster.total_slots == 12
+
+
+def test_degraded_node_slows_resident_gang():
+    def finish(degrade):
+        pol = FLT.ResiliencePolicy(daly=False)
+        sim = scripted_sim(n_hosts=1, slots=8, pol=pol,
+                           degrade_factor=0.5, degrade_time=100_000.0)
+        if degrade:
+            inject(sim, 1.0, FLT._FAULT, "h0", force_kind="degrade")
+        done = sim.run([(Workload("j", Profile.CPU, 8, 200.0,
+                                  uid="j"), 0.0)])
+        assert len(done) == 1 and done[0].retries == 0
+        return sim, done[0].finish_t
+
+    _, base = finish(False)
+    sim, slow = finish(True)
+    assert sim.perf["degrades"] == 1
+    # ~2x slower from t=1 on; allow headroom for the ckpt-overhead factor
+    assert slow > 1.5 * base
+
+
+def test_degrade_expiry_restores_full_speed():
+    pol = FLT.ResiliencePolicy(daly=False)
+    sim = scripted_sim(n_hosts=1, slots=8, pol=pol,
+                       degrade_factor=0.5, degrade_time=50.0)
+    inject(sim, 1.0, FLT._FAULT, "h0", force_kind="degrade")
+    done = sim.run([(Workload("j", Profile.CPU, 8, 200.0, uid="j"), 0.0)])
+    assert len(done) == 1
+    assert not sim.faults.degraded and not sim.faults.state
+    # 50s at half speed defers exactly 25 work-seconds of progress
+    base_sim = scripted_sim(n_hosts=1, slots=8, pol=pol)
+    base = base_sim.run([(Workload("j", Profile.CPU, 8, 200.0,
+                                   uid="j"), 0.0)])[0].finish_t
+    assert done[0].finish_t == pytest.approx(base + 25.0, rel=0.01)
+
+
+def test_cordoned_node_excluded_from_new_placement():
+    pol = FLT.ResiliencePolicy(daly=False, drain_grace=10_000.0)
+    sim = scripted_sim(n_hosts=2, pol=pol)
+    inject(sim, 1.0, FLT._FAULT, "h0", force_kind="maintenance")
+    done = sim.run([(Workload("j", Profile.CPU, 4, 50.0, uid="j"), 5.0)])
+    assert len(done) == 1
+    assert sim.perf["cordons"] == 1
+    assert "h0" not in done[0].nodes_used      # overlay kept it clear
+    assert done[0].nodes_used == {"h1": 4}
+    # cordon excludes via the overlay only: Node.used was never touched
+    assert sim.cluster.node("h0").used == 0
+
+
+def test_drain_deadline_tears_down_resident_gang():
+    pol = FLT.ResiliencePolicy(backoff_base=0.0, daly=False,
+                               drain_grace=50.0)
+    sim = scripted_sim(pol=pol, repair_time=100.0)
+    inject(sim, 10.0, FLT._FAULT, "h0", force_kind="maintenance")
+    done = sim.run([(Workload("j", Profile.CPU, 8, 500.0, uid="j"), 0.0)])
+    assert len(done) == 1
+    assert sim.perf["cordons"] == 1 and sim.perf["drains"] == 1
+    assert done[0].retries == 1                # grace too short to finish
+    assert sim.cluster.free_slots == sim.cluster.total_slots == 8
+
+
+def test_domain_fault_takes_down_whole_pod():
+    pol = FLT.ResiliencePolicy(backoff_base=0.0, daly=False)
+    sim = scripted_sim(n_hosts=2, pol=pol, domain_mtbf=1e12,
+                       domain_repair=100.0)
+    inject(sim, 50.0, FLT._DOMAIN, 0)
+    done = sim.run([(Workload("j", Profile.CPU, 8, 300.0, uid="j"), 0.0)])
+    assert len(done) == 1
+    assert sim.perf["domain_faults"] == 1
+    assert sim.perf["node_faults"] == 0        # counted as one blast
+    assert done[0].retries == 1
+    # blacklist covered the whole pod == whole fleet -> it must have been
+    # lifted (avoidance degrades, never deadlocks) and the job completed
+    assert sim.cluster.free_slots == sim.cluster.total_slots == 8
+
+
+# ----------------------------------------------------------------------
+# resilience: backoff timing, budget exhaustion, elastic shrink
+# ----------------------------------------------------------------------
+def test_backoff_delays_restart():
+    def finish(backoff):
+        pol = FLT.ResiliencePolicy(backoff_base=backoff,
+                                   backoff_factor=2.0,
+                                   backoff_jitter=0.0, daly=False,
+                                   blacklist=False)
+        sim = scripted_sim(pol=pol, repair_time=10.0)
+        for name in ("h0", "h1"):
+            inject(sim, 100.0, FLT._FAULT, name, force_kind="transient")
+        done = sim.run([(Workload("j", Profile.CPU, 8, 300.0,
+                                  uid="j"), 0.0)])
+        assert len(done) == 1 and done[0].retries == 1
+        return done[0].finish_t
+
+    # no backoff: restart gated only by the t=110 repair.  60s backoff:
+    # the retry releases at t=160 — the finish shifts by exactly 50s.
+    assert finish(60.0) == pytest.approx(finish(0.0) + 50.0)
+
+
+def test_retry_budget_exhaustion_moves_job_to_failed():
+    pol = FLT.ResiliencePolicy(max_retries=0, daly=False)
+    sim = scripted_sim(pol=pol, repair_time=10.0)
+    for name in ("h0", "h1"):
+        inject(sim, 100.0, FLT._FAULT, name, force_kind="transient")
+    done = sim.run([(Workload("j", Profile.CPU, 8, 300.0, uid="j"), 0.0)])
+    assert not done and not sim.unschedulable
+    assert [j.job.name for j in sim.failed] == ["j"]
+    assert sim.perf["fault_failed"] == 1
+    assert not sim.running and not sim.queue
+    assert sim.cluster.free_slots == sim.cluster.total_slots
+
+
+def test_elastic_gang_shrinks_instead_of_dying():
+    pol = FLT.ResiliencePolicy(backoff_base=0.0, daly=False)
+    job = Workload("j", Profile.CPU, 8, 400.0, uid="j", elastic=True)
+    sim = scripted_sim(pol=pol, repair_time=100.0)
+    inject(sim, 100.0, FLT._FAULT, "h0", force_kind="transient")
+    done = sim.run([(job, 0.0)])
+    assert len(done) == 1
+    jr = done[0]
+    assert jr.shrinks == 1 and sim.perf["shrinks"] == 1
+    assert jr.retries == 0                     # degraded, never killed
+    assert sim.perf["fault_kills"] == 0
+    # survivors absorb the lost half of the gang at half speed
+    assert jr.finish_t > 400.0
+    assert sim.cluster.free_slots == sim.cluster.total_slots == 8
+
+
+def test_rigid_gang_dies_where_elastic_shrinks():
+    pol = FLT.ResiliencePolicy(backoff_base=0.0, daly=False)
+    job = Workload("j", Profile.CPU, 8, 400.0, uid="j", elastic=False)
+    sim = scripted_sim(pol=pol, repair_time=100.0)
+    inject(sim, 100.0, FLT._FAULT, "h0", force_kind="transient")
+    done = sim.run([(job, 0.0)])
+    assert len(done) == 1
+    assert done[0].retries == 1 and done[0].shrinks == 0
+    assert sim.perf["fault_kills"] == 1 and sim.perf["shrinks"] == 0
+
+
+def test_estimator_inflates_predictions_under_faults():
+    sc = SCENARIOS["FLEET_FAULTS"]
+    base = Simulator(small_fleet(8), dc.replace(sc, faults=None,
+                                                resilience=None), seed=0)
+    flt = Simulator(small_fleet(8), sc, seed=0)
+    job = Workload("j", Profile.CPU, 8, 1_000.0, uid="j")
+    d0 = base.run([(job, 0.0)])
+    d1 = flt.run([(job, 0.0)])
+    # the contention estimator multiplies by 1 + expected-rework; with
+    # the injector on, predicted finish must exceed the fault-free one
+    assert d1[0].predicted_finish_t > d0[0].predicted_finish_t
+
+
+# ----------------------------------------------------------------------
+# satellite: lifecycle events invalidate cached EASY reservations
+# ----------------------------------------------------------------------
+def test_fail_node_invalidates_cached_easy_reservation():
+    sim = Simulator(small_fleet(4), SCENARIOS["FLEET_EASY"], seed=0)
+    sentinel = (None, -1, 0.0, 0)
+    sim.policy._resv = sentinel
+    sim._fail_node("h0", 100.0, [], None)
+    assert sim.policy._resv is None
+
+
+def test_engine_lifecycle_events_invalidate_easy_reservation():
+    sc = dc.replace(SCENARIOS["FLEET_EASY"], faults=FLT.FaultConfig(),
+                    resilience=FLT.ResiliencePolicy())
+    sim = Simulator(small_fleet(4), sc, seed=0)
+    sentinel = (None, -1, 0.0, 0)
+    for fire in (lambda: sim.faults._degrade("h0", None),
+                 lambda: sim.faults._cordon("h1", None),
+                 lambda: sim.faults._take_down("h2", 100.0, None)):
+        sim.policy._resv = sentinel
+        fire()
+        assert sim.policy._resv is None
+
+
+def test_easy_reservation_discounts_cordoned_capacity():
+    sc = dc.replace(SCENARIOS["FLEET_EASY"], faults=FLT.FaultConfig(),
+                    resilience=FLT.ResiliencePolicy())
+    sim = Simulator(small_fleet(4), sc, seed=0)
+    assert sim.faults.cordoned_free() == 0
+    sim.faults._cordon("h0", None)
+    assert sim.faults.cordoned_free() == 4
+
+
+# ----------------------------------------------------------------------
+# fault-storm invariants: seeds x configs x both event loops
+# ----------------------------------------------------------------------
+def _storm_scenario(mtbf, drain, max_retries=4):
+    return dc.replace(
+        SCENARIOS["FLEET_FAULTS"], ckpt_interval=250.0,
+        faults=FLT.FaultConfig(node_mtbf=mtbf, domain_mtbf=10.0 * mtbf,
+                               domain_repair=400.0),
+        resilience=FLT.ResiliencePolicy(max_retries=max_retries,
+                                        drain=drain))
+
+
+@pytest.mark.property
+@pytest.mark.faults
+@given(seed=st.integers(0, 10_000), legacy=st.booleans(),
+       mtbf=st.sampled_from([3_000.0, 8_000.0]), drain=st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_fault_storm_invariants(seed, legacy, mtbf, drain):
+    """No job lost, retry budgets respected, free capacity never negative
+    (checked live on every change), incremental state drains clean — on
+    both event loops, across injector seeds and lifecycle mixes."""
+    cluster = small_fleet(16, pod_size=8)
+
+    class Guard:
+        def on_free_change(self, name, free):
+            node = cluster.node(name)
+            assert 0 <= node.used, f"{name}: used {node.used} < 0"
+            assert free == node.n_slots - node.used
+
+        def on_rebuild(self):
+            pass
+
+    cluster.attach(Guard())
+    subs = poisson_heavy_traffic(60, cluster.total_slots, seed=seed,
+                                 elastic_frac=0.3)
+    sc = _storm_scenario(mtbf, drain)
+    sim = Simulator(cluster, sc, seed=seed)
+    done = sim.run(list(subs), legacy=legacy)
+    # conservation: every submission is done, failed, or unschedulable
+    assert len(done) + len(sim.failed) + len(sim.unschedulable) \
+        == len(subs)
+    assert len({j.uid for j in done}) == len(done)
+    # retry budgets: completions within budget, failures exactly over it
+    for j in done:
+        assert j.retries <= sc.resilience.max_retries
+        assert j.finish_t is not None and j.remaining <= 1e-6
+    for j in sim.failed:
+        assert j.retries == sc.resilience.max_retries + 1
+    # incremental state drains clean (backoff queue included)
+    assert not sim.running and not sim.queue
+    assert not sim._mem_load_live and not sim._node_jobs
+    assert not sim.bound.by_key
+    assert not sim.faults.work_pending()
+    # capacity consistent with the surviving fleet (total reflects any
+    # permanent losses / still-down nodes at drain time)
+    assert sim.cluster.free_slots == sim.cluster.total_slots
+
+
+@pytest.mark.property
+@pytest.mark.faults
+def test_heap_loop_matches_legacy_under_fault_storm():
+    """Twin-run oracle: the heap loop and the legacy full-rescan loop
+    must produce identical traces under an identical fault storm (the
+    engine's own event heap is loop-agnostic)."""
+    def trace(legacy):
+        cluster = small_fleet(16, pod_size=8)
+        subs = poisson_heavy_traffic(60, cluster.total_slots, seed=1,
+                                     elastic_frac=0.3)
+        sim = Simulator(cluster, _storm_scenario(4_000.0, True), seed=1)
+        done = sim.run(list(subs), legacy=legacy)
+        rows = sorted((j.uid, round(j.start_t, 6), round(j.finish_t, 6),
+                       tuple(sorted(j.nodes_used.items())))
+                      for j in done)
+        rows.append(tuple(sorted(j.uid for j in sim.failed)))
+        rows.append(tuple(sorted(j.uid for j in sim.unschedulable)))
+        return rows
+
+    assert trace(False) == trace(True)
+
+
+@pytest.mark.property
+@pytest.mark.faults
+def test_storm_with_naive_policy_terminates_and_conserves():
+    """The unbounded-retry baseline must still terminate (stall guard +
+    can_make_progress) and conserve jobs even when permanent faults
+    shrink the fleet under it."""
+    cluster = small_fleet(16, pod_size=8)
+    subs = poisson_heavy_traffic(50, cluster.total_slots, seed=3,
+                                 elastic_frac=0.2)
+    sc = dc.replace(SCENARIOS["FLEET_FAULTS"], ckpt_interval=250.0,
+                    faults=FLT.FaultConfig(node_mtbf=2_500.0),
+                    resilience=FLT.ResiliencePolicy.naive())
+    sim = Simulator(cluster, sc, seed=3)
+    done = sim.run(list(subs))
+    assert len(done) + len(sim.failed) + len(sim.unschedulable) \
+        == len(subs)
+    assert not sim.running and not sim.queue
+
+
+# ----------------------------------------------------------------------
+# satellite: checkpoint hardening — torn-write fallback
+# ----------------------------------------------------------------------
+np = pytest.importorskip("numpy")
+ckpt = pytest.importorskip("repro.ckpt.checkpoint")
+
+
+def _tree(step):
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4) + step,
+            "b": np.full(3, float(step))}
+
+
+def _assert_tree(got, want):
+    assert np.allclose(np.asarray(got["w"]), want["w"])
+    assert np.allclose(np.asarray(got["b"]), want["b"])
+
+
+def _step_dir(path, step):
+    return os.path.join(path, f"step_{step:08d}")
+
+
+def test_save_leaves_no_partial_files(tmp_path):
+    path = str(tmp_path)
+    for s in (1, 2):
+        ckpt.save(path, _tree(s), step=s)
+    leftovers = [os.path.join(r, f) for r, _, fs in os.walk(path)
+                 for f in fs if f.endswith(".part")]
+    leftovers += [d for d in os.listdir(path) if d.endswith(".tmp")]
+    assert not leftovers
+    assert ckpt.latest_step(path) == 2
+
+
+def test_restore_falls_back_on_truncated_leaf(tmp_path):
+    path = str(tmp_path)
+    for s in (1, 2):
+        ckpt.save(path, _tree(s), step=s)
+    leaf = os.path.join(_step_dir(path, 2), "leaf_00000.npy")
+    with open(leaf, "rb") as f:
+        raw = f.read()
+    with open(leaf, "wb") as f:
+        f.write(raw[:10])                      # torn write
+    _assert_tree(ckpt.restore(path, _tree(0)), _tree(1))
+
+
+def test_restore_falls_back_on_corrupt_manifest(tmp_path):
+    path = str(tmp_path)
+    for s in (1, 2):
+        ckpt.save(path, _tree(s), step=s)
+    with open(os.path.join(_step_dir(path, 2), "manifest.json"),
+              "w") as f:
+        f.write("{not json")
+    _assert_tree(ckpt.restore(path, _tree(0)), _tree(1))
+
+
+def test_restore_step_arg_still_falls_back(tmp_path):
+    path = str(tmp_path)
+    for s in (1, 2, 3):
+        ckpt.save(path, _tree(s), step=s)
+    os.remove(os.path.join(_step_dir(path, 2), "leaf_00001.npy"))
+    # ask for step 2: its leaf is gone, so the next older step wins
+    _assert_tree(ckpt.restore(path, _tree(0), step=2), _tree(1))
+    # the newest step is untouched and still preferred without `step`
+    _assert_tree(ckpt.restore(path, _tree(0)), _tree(3))
+
+
+def test_restore_raises_when_every_step_is_corrupt(tmp_path):
+    path = str(tmp_path)
+    for s in (1, 2):
+        ckpt.save(path, _tree(s), step=s)
+        with open(os.path.join(_step_dir(path, s), "manifest.json"),
+                  "w") as f:
+            f.write("xx")
+    with pytest.raises(IOError, match="no intact checkpoint"):
+        ckpt.restore(path, _tree(0))
+
+
+def test_restore_raises_filenotfound_when_empty(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path), _tree(0))
