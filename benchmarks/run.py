@@ -16,7 +16,8 @@ import inspect
 import json
 
 
-SMOKE_JOBS = ("sched", "sim_scale", "preempt", "backfill", "faults")
+SMOKE_JOBS = ("sched", "sim_scale", "preempt", "backfill", "faults",
+              "net_topo")
 
 
 def main() -> None:
@@ -33,13 +34,13 @@ def main() -> None:
                               else "BENCH_sched.json")
     csv_rows = []
     from benchmarks import (backfill, exp1_single_type, exp2_mixed,
-                            exp3_frameworks, faults, preempt, roofline,
-                            sched_efficiency, sim_scale)
+                            exp3_frameworks, faults, net_topo, preempt,
+                            roofline, sched_efficiency, sim_scale)
     jobs = {"exp1": exp1_single_type.run, "exp2": exp2_mixed.run,
             "exp3": exp3_frameworks.run, "sched": sched_efficiency.run,
             "backfill": backfill.run, "preempt": preempt.run,
-            "faults": faults.run, "roofline": roofline.run,
-            "sim_scale": sim_scale.run}
+            "faults": faults.run, "net_topo": net_topo.run,
+            "roofline": roofline.run, "sim_scale": sim_scale.run}
     for name, fn in jobs.items():
         if args.only and args.only != name:
             continue

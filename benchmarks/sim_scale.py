@@ -18,6 +18,12 @@ Four sweep modes per fleet size:
                   reservations (the pluggable-policy row)
 * ``easy_fail`` — FLEET_EASY with ~2% of hosts failing mid-run: the
                   failures + backfill fleet scenario
+* ``topo``      — FLEET_TOPO: network-topology layer on (link traffic
+                  accounting + per-switch ScoreIndex packing)
+* ``topo_flat`` — the same scenario with ``topology=None``: the paired
+                  baseline for the topology overhead ratio (acceptance:
+                  <= 1.5x per-event cost at 4096 hosts — packed
+                  admission stays O(polylog N))
 
 The (hosts, mode) matrix can run across worker *processes* (the cells are
 independent simulations).  Concurrent cells contend for cores, which
@@ -50,6 +56,7 @@ SIZES = ((256, 2000), (1024, 3000), (4096, 10000), (8192, 15000))
 LEGACY_SIZES = (256, 1024)
 SMOKE_SIZES = ((64, 300),)
 EASY_SCENARIO = "FLEET_EASY"
+TOPO_SCENARIO = "FLEET_TOPO"
 FAIL_FRACTION = 0.02          # hosts failing in the easy_fail mode
 FAIL_DOWNTIME = 300.0
 
@@ -73,10 +80,16 @@ def _failure_plan(n_hosts: int, subs, seed: int):
 
 
 def run_once(n_hosts: int, n_jobs: int, seed: int = 0, legacy: bool = False,
-             scenario: str = "CM_G_TG", failures: bool = False) -> dict:
+             scenario: str = "CM_G_TG", failures: bool = False,
+             strip_topology: bool = False) -> dict:
+    import dataclasses
     cluster = fleet(n_hosts)
     subs = poisson_heavy_traffic(n_jobs, cluster.total_slots, seed=seed)
-    sim = Simulator(cluster, SCENARIOS[scenario], seed=seed)
+    scn = SCENARIOS[scenario]
+    if strip_topology:   # paired baseline for the topology overhead ratio
+        scn = dataclasses.replace(scn, name=scenario + "_flat",
+                                  topology=None)
+    sim = Simulator(cluster, scn, seed=seed)
     if failures:
         sim.failures = _failure_plan(n_hosts, subs, seed)
     t0 = time.perf_counter()
@@ -106,6 +119,9 @@ def run_once(n_hosts: int, n_jobs: int, seed: int = 0, legacy: bool = False,
             "admit_calls": p["admit_calls"],
             "place_attempts": p["place_attempts"],
             "reservations": p["reservations"],
+            "topo_s": round(p["topo_s"], 3),
+            "topo_registers": p["topo_registers"],
+            "topo_packed_places": p["topo_packed_places"],
         },
     }
 
@@ -115,9 +131,11 @@ def _run_cell(cell) -> dict:
     hosts, jobs, mode, scenario = cell
     r = run_once(hosts, jobs,
                  legacy=(mode == "legacy"),
-                 scenario=(EASY_SCENARIO if mode.startswith("easy")
+                 scenario=(TOPO_SCENARIO if mode.startswith("topo")
+                           else EASY_SCENARIO if mode.startswith("easy")
                            else scenario),
-                 failures=(mode == "easy_fail"))
+                 failures=(mode == "easy_fail"),
+                 strip_topology=(mode == "topo_flat"))
     r["mode"] = mode
     return r
 
@@ -130,6 +148,8 @@ def _cells(sizes, legacy_sizes, scenario):
             out.append((hosts, jobs, "legacy", scenario))
         out.append((hosts, jobs, "easy", scenario))
         out.append((hosts, jobs, "easy_fail", scenario))
+        out.append((hosts, jobs, "topo", scenario))
+        out.append((hosts, jobs, "topo_flat", scenario))
     return out
 
 
@@ -178,7 +198,18 @@ def run(csv_rows=None, smoke: bool = False, legacy: bool = True,
             speedups[str(hosts)] = round(
                 modes["legacy"]["wall_s"] / modes["heap"]["wall_s"], 2)
             print(f"  speedup @{hosts} hosts: {speedups[str(hosts)]}x")
+    # topology overhead: per-event cost of the topology layer against the
+    # identical scenario with topology=None (acceptance: <= 1.5x @4096)
+    topo_overhead = {}
+    for hosts, modes in by_size.items():
+        if "topo" in modes and "topo_flat" in modes:
+            base = modes["topo_flat"]["us_per_event"] or 1.0
+            topo_overhead[str(hosts)] = round(
+                modes["topo"]["us_per_event"] / base, 2)
+            print(f"  topo overhead @{hosts} hosts: "
+                  f"{topo_overhead[str(hosts)]}x per event")
     payload = {"results": results, "speedup_vs_legacy": speedups,
+               "topo_overhead_per_event": topo_overhead,
                "smoke": smoke}
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)

@@ -50,6 +50,18 @@ with no knowledge of why they were shaped that way:
   select the j-th feasible node in cluster order), and per-node
   ``mem_bw_tasks`` so heterogeneous fleets are *modeled* (bandwidth
   saturation per host), not just schedulable;
+* ``topology`` — the network-topology layer, sitting *between* the
+  cluster model and the estimates: a node -> rack-switch -> spine tree
+  (``Node.switch`` / ``Node.pod``) with per-link bandwidth derived from
+  the cluster's ``intra_bw / inter_bw / cross_pod_bw`` fields and live
+  per-link traffic accounting (registered on gang start, released on
+  every teardown path including elastic shrink).  The gang's
+  bottleneck-link stress replaces the flat ``net_internode`` factor in
+  the pure ``job_speed`` — prediction and execution read one model —
+  and the task-group binder packs NETWORK gangs under one switch via
+  the per-switch dimension of ``taskgroup.ScoreIndex`` (admission stays
+  O(polylog N)).  ``Scenario.topology is None`` (default) removes the
+  layer entirely — every hook gated, flat traces byte-identical;
 * gang admission and the progress-based event loop live in ``simulator``;
   admission cost is O(polylog N) per event: the task-group binder's
   argmax is a live ``taskgroup.ScoreIndex`` query maintained across
@@ -109,6 +121,8 @@ from repro.core.queues import (QUEUES, FairShareQueue, FifoQueue,
 from repro.core.scenarios import (SCENARIOS, TENANT_CLASSES, diurnal_poisson,
                                   get_scenario, poisson_heavy_traffic)
 from repro.core.simulator import PerfParams, Scenario, Simulator
+from repro.core.topology import (NetworkTopology, TopologyConfig,
+                                 make_topology)
 from repro.core import taskgroup
 
 __all__ = ["Cluster", "Node", "fleet_cluster", "hetero_cluster",
@@ -124,4 +138,5 @@ __all__ = ["Cluster", "Node", "fleet_cluster", "hetero_cluster",
            "QueueDiscipline", "FifoQueue", "PriorityQueue",
            "FairShareQueue", "make_queue", "SCENARIOS", "TENANT_CLASSES",
            "diurnal_poisson", "get_scenario", "poisson_heavy_traffic",
-           "PerfParams", "Scenario", "Simulator", "taskgroup"]
+           "PerfParams", "Scenario", "Simulator", "NetworkTopology",
+           "TopologyConfig", "make_topology", "taskgroup"]

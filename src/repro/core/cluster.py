@@ -60,6 +60,10 @@ class Node:
     # speed model saturates low-bandwidth nodes earlier (the Fenwick index
     # made such fleets *schedulable*; this makes them *modeled*)
     mem_bw_tasks: Optional[float] = None
+    # rack-switch id for the network-topology layer (``core.topology``):
+    # None = derive switches by chunking each pod's nodes in cluster order
+    # (``TopologyConfig.hosts_per_switch``); fleet/hetero builders set it
+    switch: Optional[int] = None
 
     def __post_init__(self):
         if self.domain_used is None:
@@ -87,6 +91,13 @@ class Node:
 @dataclasses.dataclass
 class Cluster:
     nodes: List[Node]
+    # Fabric bandwidths, consumed by the network-topology layer
+    # (``core.topology``) when a scenario opts in (``Scenario.topology``):
+    # ``intra_bw`` scales the multi-worker (shared-memory / intra-host ICI)
+    # term of the speed model; ``inter_bw`` is the within-rack cross-node
+    # reference every link bandwidth is relative to; ``cross_pod_bw`` sets
+    # the default uplink (sqrt(cross/inter)) and spine (cross/inter)
+    # bandwidths.  Topology off (the default) leaves them unread.
     intra_bw: float = 1.0        # relative fast-domain bandwidth
     inter_bw: float = 0.02       # relative cross-node bandwidth (1GbE/ICI)
     cross_pod_bw: float = 0.004  # relative DCN bandwidth (fleet)
@@ -371,31 +382,41 @@ def paper_cluster() -> Cluster:
 
 
 def fleet_cluster(n_pods: int = 2, hosts_per_pod: int = 64,
-                  chips_per_host: int = 4) -> Cluster:
-    """Production TPU fleet: v5e-style pods (the multi-pod dry-run mesh)."""
+                  chips_per_host: int = 4,
+                  hosts_per_switch: int = 8) -> Cluster:
+    """Production TPU fleet: v5e-style pods (the multi-pod dry-run mesh).
+    Each pod's hosts are racked ``hosts_per_switch`` to a switch
+    (``Node.switch``), so topology-enabled scenarios get the two-level
+    switch/spine tree from the builder instead of the chunking default."""
     nodes = []
+    sw_per_pod = -(-hosts_per_pod // max(1, hosts_per_switch))
     for p in range(n_pods):
         for h in range(hosts_per_pod):
             nodes.append(Node(f"pod{p}-host{h}", n_slots=chips_per_host,
-                              n_domains=1, pod=p))
+                              n_domains=1, pod=p,
+                              switch=p * sw_per_pod
+                              + h // max(1, hosts_per_switch)))
     return Cluster(nodes, intra_bw=1.0, inter_bw=0.6, cross_pod_bw=0.05)
 
 
 def hetero_cluster(groups: Sequence[tuple] = ((48, 4), (12, 32),
-                                              (4, 256))) -> Cluster:
+                                              (4, 256)),
+                   hosts_per_switch: int = 8) -> Cluster:
     """Heterogeneous fleet: ``groups`` is ``[(n_hosts, slots_per_host)]``
     or ``[(n_hosts, slots_per_host, mem_bw_tasks)]`` — small accelerator
     hosts mixed with large-slot superpod nodes, the shape the Fenwick
     capacity index exists for.  The optional third element gives each
     group its own memory bandwidth (tasks at full speed), so the speed
-    model treats the groups differently too."""
+    model treats the groups differently too.  Hosts are racked
+    ``hosts_per_switch`` to a switch in build order."""
     nodes = []
     i = 0
+    hps = max(1, hosts_per_switch)
     for group in groups:
         count, slots = group[0], group[1]
         bw = group[2] if len(group) > 2 else None
         for _ in range(count):
             nodes.append(Node(f"h{i}", n_slots=slots, n_domains=1,
-                              mem_bw_tasks=bw))
+                              mem_bw_tasks=bw, switch=i // hps))
             i += 1
     return Cluster(nodes)

@@ -77,7 +77,8 @@ def mem_gran_factor(p, affinity: bool, tpw: int) -> float:
 
 def job_speed(p, affinity: bool, prof: Profile, tpw: int, n_nodes: int,
               n_workers: int, node_loads: Iterable[Tuple[float, float]],
-              sharing: int, scale: float = 1.0) -> float:
+              sharing: int, scale: float = 1.0,
+              net: Optional[Tuple[float, float]] = None) -> float:
     """Relative execution speed (<= 1) of one job — pure.
 
     ``node_loads`` yields ``(mem demand, bandwidth)`` per node the job
@@ -89,6 +90,17 @@ def job_speed(p, affinity: bool, prof: Profile, tpw: int, n_nodes: int,
     default 1.0 divides out exactly, so the arithmetic is the
     pre-factoring ``Simulator._speed`` body and the engine's golden
     traces pin this function too.
+
+    ``net`` is the network-topology layer's ``(intra scale, bottleneck
+    stress)`` pair for NETWORK-class jobs (``topology.NetworkTopology
+    .net_factors`` / ``.queued_net``): the multi-worker term becomes
+    ``1 + (net_multiworker - 1) * intra`` and the internode term is
+    multiplied by the gang's bottleneck-link stress (hop penalty x
+    saturation over its placement).  ``None`` (the default — every
+    topology-off scenario) takes the original flat branches verbatim;
+    a degenerate ``(1.0, 1.0)`` pair reproduces them float-for-float
+    (``x - 1.0`` and ``+ 1.0`` round-trip exactly for ``x >= 1``, and
+    ``* 1.0`` is exact), which is what pins the one-switch twin-run.
     """
     f = 1.0
     if not affinity:
@@ -105,9 +117,15 @@ def job_speed(p, affinity: bool, prof: Profile, tpw: int, n_nodes: int,
         f *= fm if prof == Profile.MEMORY else fm ** 0.5
     if prof == Profile.NETWORK:
         if n_workers > 1:
-            f *= p.net_multiworker
+            if net is None:
+                f *= p.net_multiworker
+            else:
+                f *= 1.0 + (p.net_multiworker - 1.0) * net[0]
         if n_nodes > 1:
-            f *= 1.0 + p.net_internode * (n_nodes - 1)
+            if net is None:
+                f *= 1.0 + p.net_internode * (n_nodes - 1)
+            else:
+                f *= 1.0 + p.net_internode * (n_nodes - 1) * net[1]
     return scale / f
 
 
@@ -209,8 +227,15 @@ class ContentionEstimator(RuntimeEstimator):
             node_loads = ((mean_load + own, self._bw_mean),)
         sharing = 0 if sim.sc.affinity else \
             min(p.share_cap, len(sim.running))
+        # topology on: the queued prediction assumes best-case packing
+        # (the placement the topology-aware binder aims for) — optimistic
+        # like the rest of the queued inputs, monotone in nothing new
+        net = None
+        if sim.topo is not None and prof is Profile.NETWORK:
+            net = sim.topo.queued_net(n_nodes)
         speed = job_speed(p, sim.sc.affinity, prof, gran.tasks_per_worker,
-                          n_nodes, gran.n_workers, node_loads, sharing)
+                          n_nodes, gran.n_workers, node_loads, sharing,
+                          net=net)
         r = jr.remaining / speed
         # expected-rework inflation under the active fault model: failures
         # cost (on average) half a checkpoint interval each, so a longer

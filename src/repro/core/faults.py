@@ -489,6 +489,12 @@ class FaultEngine:
         placement is released, shared state stays consistent."""
         sim = self.sim
         sim._sync(jr)
+        topo = sim.topo
+        if topo is not None:
+            # the gang's link footprint is placement-derived: release the
+            # pre-shrink registration now, re-register from the survivors
+            # below (this is the one teardown that bypasses _on_stop)
+            topo.on_stop(jr, dirty)
         node = sim.cluster.node(node_name)
         keep = [w for w in jr.workers if w.node != node_name]
         lost = [w for w in jr.workers if w.node == node_name]
@@ -516,6 +522,8 @@ class FaultEngine:
                 del sim._node_jobs[node_name]
         jr.workers = keep
         jr._nodes = None                       # recompute from survivors
+        if topo is not None:
+            topo.on_start(jr, dirty)           # survivors' link footprint
         total = jr.gran.n_tasks
         jr._width_factor *= (total - lost_tasks) / total
         done_work = jr.job.base_runtime - jr.remaining

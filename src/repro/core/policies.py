@@ -76,6 +76,7 @@ from typing import Dict, List, Optional
 
 from repro.core import taskgroup as TG
 from repro.core.controller import make_workers
+from repro.core.profiles import Profile
 
 
 def make_policy(sim) -> "PlacementPolicy":
@@ -307,10 +308,16 @@ class TaskGroupPolicy(PlacementPolicy):
     def _score_index(self):
         si = self._sindex
         if si is None:
-            if len(self.sim.cluster.nodes) < self._INDEX_MIN_NODES:
+            topo = self.sim.topo
+            packing = topo is not None and topo.packing
+            # topology packing is served by the index's per-switch buckets,
+            # so it overrides the small-fleet crossover heuristic
+            if not packing and \
+                    len(self.sim.cluster.nodes) < self._INDEX_MIN_NODES:
                 return None
-            si = self._sindex = TG.ScoreIndex(self.sim.cluster,
-                                              self.sim.bound)
+            si = self._sindex = TG.ScoreIndex(
+                self.sim.cluster, self.sim.bound,
+                switch_of=topo.switch_idx if packing else None)
         return si
 
     def pre_reject(self, jr, use_index: bool) -> bool:
@@ -330,14 +337,28 @@ class TaskGroupPolicy(PlacementPolicy):
             return TG.schedule_job(sim.cluster, workers, jr.gran.n_groups,
                                    bound=sim.bound, use_index=False,
                                    reserve=reserve)
+        topo = sim.topo
         if jr._plan is None:         # plan is deterministic — cache it
             workers = make_workers(jr.job, jr.gran, uid=jr.uid)
-            jr._plan = (workers, TG.make_plan(workers, jr.gran.n_groups))
+            plan = TG.make_plan(workers, jr.gran.n_groups)
+            if topo is not None and topo.rank_aware:
+                # rank-aware placement order: bind workers in rank order
+                # so adjacent ranks stage onto the same (then adjacent)
+                # nodes under the packed switch — group balance and the
+                # scoring itself are untouched, only the commit order is
+                groups, ordered = plan
+                plan = (groups, sorted(ordered, key=lambda w: w.index))
+            jr._plan = (workers, plan)
         workers, plan = jr._plan
+        topo_pack = None
+        if topo is not None and topo.packing \
+                and jr.job.profile is Profile.NETWORK:
+            topo_pack = topo
+            sim.perf["topo_packed_places"] += 1
         return TG.schedule_job(sim.cluster, workers, jr.gran.n_groups,
                                bound=sim.bound, use_index=True, plan=plan,
                                score_index=self._score_index(),
-                               reserve=reserve)
+                               reserve=reserve, topo_pack=topo_pack)
 
 
 class EasyBackfillPolicy(PlacementPolicy):

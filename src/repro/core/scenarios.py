@@ -21,6 +21,7 @@ from typing import Dict, List, Sequence, Tuple
 from repro.core.faults import FaultConfig, ResiliencePolicy
 from repro.core.profiles import Profile, Workload
 from repro.core.simulator import Scenario
+from repro.core.topology import TopologyConfig
 
 # multi-tenant mix for the queueing scenarios: (tenant, priority class,
 # fair-share weight, arrival fraction).  Three K8s-style classes: paying
@@ -119,6 +120,17 @@ SCENARIOS: Dict[str, Scenario] = {
                              policy="granularity", taskgroup=True,
                              job_ids="uid", faults=FaultConfig(),
                              resilience=ResiliencePolicy()),
+    # ---- network-topology layer (repro.core.topology) --------------------
+    # switch/spine link model + contention threaded through the speed
+    # model, topology-packed admission (per-switch ScoreIndex buckets)
+    # and rank-aware worker ordering.  ``force_split`` (the Volcano path)
+    # so NETWORK gangs span nodes — under scale/granularity planners a
+    # network job collapses to one coarse worker and never touches links.
+    # Every scenario above leaves ``topology=None`` — layer off, traces
+    # byte-identical
+    "FLEET_TOPO": Scenario("FLEET_TOPO", affinity=True, policy=None,
+                           taskgroup=True, job_ids="uid",
+                           force_split=True, topology=TopologyConfig()),
 }
 
 

@@ -70,6 +70,7 @@ from repro.core.planner import Granularity, select_granularity
 from repro.core.profiles import MEM_WEIGHT as _MEM_WEIGHT
 from repro.core.profiles import Profile, Workload
 from repro.core import taskgroup as TG
+from repro.core import topology as TPO
 
 
 # --------------------------------------------------------------------------
@@ -137,6 +138,13 @@ class Scenario:
     # applied to fault-killed gangs (None with faults set = defaults)
     faults: Optional[FLT.FaultConfig] = None
     resilience: Optional[FLT.ResiliencePolicy] = None
+    # network-topology layer (repro.core.topology): the node -> rack
+    # switch -> spine tree with per-link bandwidth + live contention,
+    # replacing the flat ``net_internode`` factor for NETWORK gangs and
+    # (with ``packing``) steering the task-group binder.  None (the
+    # default) = layer off — every hook is skipped and traces stay
+    # byte-identical to the flat model
+    topology: Optional[TPO.TopologyConfig] = None
 
 
 @dataclasses.dataclass(eq=False)         # identity hash: JobRuns live in the
@@ -178,6 +186,9 @@ class JobRun:                            # per-node running-jobs index
     _width_factor: float = dataclasses.field(default=1.0, repr=False)
     # failure-domain avoidance set for the next attempt (fault engine)
     _avoid: Optional[set] = dataclasses.field(default=None, repr=False)
+    # topology-layer registration record: the (link key, tasks) list this
+    # gang holds in ``NetworkTopology.traffic`` (None = not registered)
+    _net_links: Optional[list] = dataclasses.field(default=None, repr=False)
 
     @property
     def nodes_used(self) -> Dict[str, int]:
@@ -248,7 +259,13 @@ class Simulator:
             # fault-engine counters (all zero with the injector off)
             "node_faults": 0, "domain_faults": 0, "degrades": 0,
             "cordons": 0, "drains": 0, "fault_kills": 0, "retries": 0,
-            "fault_failed": 0, "shrinks": 0, "rework_s": 0.0}
+            "fault_failed": 0, "shrinks": 0, "rework_s": 0.0,
+            # topology-layer counters (all zero with the layer off):
+            # link-traffic registrations/releases, gangs placed through
+            # the switch-packed argmax, and the registry's wall-time
+            # slice (nested inside admit_s / heap_s)
+            "topo_registers": 0, "topo_releases": 0,
+            "topo_packed_places": 0, "topo_s": 0.0}
         # per-node memory bandwidth: None when the fleet is homogeneous
         # (the scalar PerfParams path — zero per-event overhead); else a
         # name -> tasks-at-full-speed map defaulting to the scenario value
@@ -258,6 +275,8 @@ class Simulator:
             self._node_bw = {n.name: (pbw if n.mem_bw_tasks is None
                                       else n.mem_bw_tasks)
                              for n in cluster.nodes}
+        self.topo = TPO.make_topology(self)    # network-topology layer
+        #                                      # (None = flat net model)
         self.policy = POL.make_policy(self)    # infrastructure-layer policy
         self.discipline = QD.make_queue(self)  # application-layer queue
         self.estimator = EST.make_estimator(self)  # application-layer runtime
@@ -336,6 +355,10 @@ class Simulator:
             if w_mem:
                 self._mem_load_live[node] = \
                     self._mem_load_live.get(node, 0.0) + w_mem * tasks
+        if self.topo is not None:
+            # register link traffic before the finish prediction below,
+            # so the estimator prices the gang's own contention in
+            self.topo.on_start(jr, dirty_nodes)
         jr._synced_t = self.now
         jr._ver += 1              # any old heap entry is stale
         jr._pushed = False
@@ -374,6 +397,8 @@ class Simulator:
                     self._mem_load_live[node] = left
                 else:
                     self._mem_load_live.pop(node, None)
+        if self.topo is not None:
+            self.topo.on_stop(jr, dirty_nodes)
         jr._ver += 1              # invalidate this job's heap entry
         jr._pushed = False
         jr._nodes = None
@@ -480,9 +505,13 @@ class Simulator:
             node_loads = ()
         scale = 1.0 if self.faults is None \
             else self.faults.speed_scale(jr, nodes)
+        net = None
+        if self.topo is not None and prof is Profile.NETWORK:
+            net = self.topo.net_factors(jr)
         return EST.job_speed(p, self.sc.affinity, prof,
                              jr.gran.tasks_per_worker, len(nodes),
-                             len(jr.workers), node_loads, sharing, scale)
+                             len(jr.workers), node_loads, sharing, scale,
+                             net)
 
     def _refresh_speeds(self):
         """Legacy full refresh: every running job, mem load rebuilt."""

@@ -139,11 +139,24 @@ class ScoreIndex:
       both L and V bounded by the node size C — flat in fleet size;
     * a push budget triggers a periodic O(N) compaction so stale entries
       in never-queried buckets cannot accumulate (amortized O(1)/push).
+
+    **Per-subtree dimension** (network-topology layer): constructed with
+    ``switch_of`` (cluster node index -> rack-switch id), the index
+    additionally maintains the same lazy ``(L, free)`` bucket structure
+    *per switch* plus an aggregate free-capacity total per switch served
+    by a lazy max-heap — so the topology-packed binder can ask "best
+    plain node *under this switch*" (:meth:`best_plain` with
+    ``switch=``) and "emptiest switch" (:meth:`best_switch`) at the same
+    O(polylog) cost, fed by the identical listener events.  Without
+    ``switch_of`` (every pre-topology scenario) nothing extra is built
+    or maintained — behaviour and cost are unchanged.
     """
 
-    def __init__(self, cluster: Cluster, bound: BoundIndex):
+    def __init__(self, cluster: Cluster, bound: BoundIndex,
+                 switch_of: Optional[Sequence[int]] = None):
         self.cluster = cluster
         self.bound = bound
+        self.switch_of = list(switch_of) if switch_of is not None else None
         cluster.attach(self)
         bound.listeners.append(self)
         self.on_rebuild()
@@ -153,9 +166,14 @@ class ScoreIndex:
         compaction: rebuilding drops every stale heap entry)."""
         nodes = self.cluster.nodes
         counts = self.bound.counts
+        sw = self.switch_of
         self._lv = [0] * len(nodes)
         self._fr = [0] * len(nodes)
         self._by_level: Dict[int, Dict[int, list]] = {}
+        self._by_sw: Optional[Dict[int, Dict[int, Dict[int, list]]]] = \
+            {} if sw is not None else None
+        self._sw_free: Dict[int, int] = {}
+        self._sw_heap: List[tuple] = []
         self._dirty: set = set()
         for i, n in enumerate(nodes):
             L = len(counts.get(n.name, ()))
@@ -163,9 +181,21 @@ class ScoreIndex:
             self._lv[i] = L
             self._fr[i] = f
             self._by_level.setdefault(L, {}).setdefault(f, []).append(i)
+            if sw is not None:
+                s = sw[i]
+                self._by_sw.setdefault(s, {}).setdefault(L, {}) \
+                    .setdefault(f, []).append(i)
+                self._sw_free[s] = self._sw_free.get(s, 0) + f
         for lvl in self._by_level.values():
             for h in lvl.values():
                 heapq.heapify(h)
+        if sw is not None:
+            for swl in self._by_sw.values():
+                for lvl in swl.values():
+                    for h in lvl.values():
+                        heapq.heapify(h)
+            self._sw_heap = [(-fv, s) for s, fv in self._sw_free.items()]
+            heapq.heapify(self._sw_heap)
         self._pushes = 0
         self._push_budget = 4 * len(nodes) + 256
 
@@ -193,6 +223,11 @@ class ScoreIndex:
             L = len(counts.get(name, ()))
             f = n.n_slots - n.used
             if self._lv[idx] != L or self._fr[idx] != f:
+                if self.switch_of is not None and f != self._fr[idx]:
+                    s = self.switch_of[idx]
+                    nf = self._sw_free.get(s, 0) + (f - self._fr[idx])
+                    self._sw_free[s] = nf
+                    heapq.heappush(self._sw_heap, (-nf, s))
                 self._lv[idx] = L
                 self._fr[idx] = f
                 self._push(idx, L, f)
@@ -208,11 +243,19 @@ class ScoreIndex:
             lvl[free] = [idx]
         else:
             heapq.heappush(heap, idx)
+        if self.switch_of is not None:
+            lvl = self._by_sw.setdefault(self.switch_of[idx], {}) \
+                .setdefault(level, {})
+            heap = lvl.get(free)
+            if heap is None:
+                lvl[free] = [idx]
+            else:
+                heapq.heappush(heap, idx)
 
     # -- query -------------------------------------------------------------
     def best_plain(self, need: int, staged_idx,
-                   reserved: Optional[Dict[int, int]] = None
-                   ) -> Optional[tuple]:
+                   reserved: Optional[Dict[int, int]] = None,
+                   switch: Optional[int] = None) -> Optional[tuple]:
         """Lexicographic min ``(busy level, node idx)`` among nodes with
         ``free >= need``, excluding ``staged_idx`` (the current gang's
         staged nodes — those are scored separately as specials).  Exactly
@@ -224,11 +267,45 @@ class ScoreIndex:
         bucket and unchanged rank — only while ``free - withheld >=
         need``; the withheld slots are invisible to the query without
         any mutation of ``Node.used`` (so no index churn, and shared
-        cluster state never sees the reservation)."""
+        cluster state never sees the reservation).
+
+        ``switch`` restricts the walk to nodes under that rack switch
+        (requires ``switch_of``; same semantics over the per-switch
+        buckets — the topology-packed binder's subtree query)."""
         if self._dirty:
             self._flush()
+        if switch is None:
+            by_level = self._by_level
+        else:
+            by_level = self._by_sw.get(switch)
+            if by_level is None:
+                return None
+        return self._walk(by_level, need, staged_idx, reserved)
+
+    def best_switch(self, need: int = 0) -> Optional[int]:
+        """Switch id with the largest aggregate free slot capacity (ties:
+        lowest id) — the packed binder's seed switch for a gang touching
+        no staged switch yet, but only when that capacity covers
+        ``need`` (the gang's whole remaining demand): a switch that
+        cannot hold the gang would *scatter* it across partially-filled
+        racks, losing to the plain global argmax's natural low-index
+        clustering.  Lazy max-heap, stale entries dropped at query time
+        against the authoritative ``_sw_free`` totals."""
+        if self._dirty:
+            self._flush()
+        h = self._sw_heap
+        free = self._sw_free
+        while h:
+            negf, s = h[0]
+            if free.get(s, 0) != -negf:
+                heapq.heappop(h)              # stale: total moved on
+                continue
+            return s if -negf >= need else None
+        return None
+
+    def _walk(self, by_level, need: int, staged_idx,
+              reserved: Optional[Dict[int, int]]) -> Optional[tuple]:
         lv, fr = self._lv, self._fr
-        by_level = self._by_level
         for level in sorted(by_level):
             lvl = by_level[level]
             best = -1
@@ -477,6 +554,7 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
                  score_index: Optional[ScoreIndex] = None,
                  incremental_specials: bool = True,
                  reserve: Optional[Dict[str, int]] = None,
+                 topo_pack=None,
                  ) -> Optional[List[WorkerSpec]]:
     """Algorithms 3+4 end-to-end for one job (gang semantics).
 
@@ -520,6 +598,19 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
     surplus: each withheld amount must not exceed the node's current
     free capacity (a mask beyond free would leak negative slack into the
     aggregate pre-rejects; the overlay simply rules the node out).
+
+    ``topo_pack`` is a ``topology.NetworkTopology`` (or any object with a
+    ``switch_idx`` node-index -> switch-id list): plain-node candidates
+    are preferred *under the gang's own rack switches* — each worker
+    first queries the per-switch ``ScoreIndex`` buckets of switches the
+    gang already staged on, then the emptiest switch
+    (:meth:`ScoreIndex.best_switch`), and only then the global argmax —
+    so a network gang lands under one switch whenever one fits, at the
+    same O(polylog) admission cost.  Requires ``score_index`` built with
+    ``switch_of`` (silently inert otherwise); feasibility is never
+    narrowed — the global fallback keeps every placement the blind
+    binder could make reachable.  Index-path only: the ``use_index=
+    False`` oracle stays topology-blind by design.
     """
     workers = list(workers)
     indexed = use_index and predicate is None
@@ -563,6 +654,13 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
     placed: List[WorkerSpec] = []
     walk_cache: Dict[int, list] = {}
     staged_idx: set = set()        # staged node indices (score-index path)
+    # topology packing: switches the gang has staged on so far, plus the
+    # gang's remaining unplaced demand (a seed switch must cover all of
+    # it — see ScoreIndex.best_switch)
+    packing = (topo_pack is not None and score_index is not None
+               and score_index.switch_of is not None)
+    staged_sw: set = set()
+    gang_left = sum(w.n_tasks for w in ordered) if packing else 0
 
     def full_score(name, key_w, gsize):
         """Algorithm 4 score with the staged overlay merged in — exactly
@@ -649,7 +747,30 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
                     if best is None or rank > best_rank:
                         best, best_rank = n, rank
             if score_index is not None:
-                top = score_index.best_plain(need, staged_idx, reserved_idx)
+                if packing:
+                    # packed plain query: the gang's own switches first
+                    # (lexicographic-min across them — within-switch order
+                    # matches the global one), then the emptiest switch,
+                    # then the global argmax so feasibility never narrows
+                    top = None
+                    for swid in staged_sw:
+                        t = score_index.best_plain(need, staged_idx,
+                                                   reserved_idx,
+                                                   switch=swid)
+                        if t is not None and (top is None or t < top):
+                            top = t
+                    if top is None:
+                        swid = score_index.best_switch(gang_left)
+                        if swid is not None and swid not in staged_sw:
+                            top = score_index.best_plain(need, staged_idx,
+                                                         reserved_idx,
+                                                         switch=swid)
+                    if top is None:
+                        top = score_index.best_plain(need, staged_idx,
+                                                     reserved_idx)
+                else:
+                    top = score_index.best_plain(need, staged_idx,
+                                                 reserved_idx)
                 if top is not None:
                     L, idx = top
                     name = cluster.nodes[idx].name
@@ -704,7 +825,11 @@ def schedule_job(cluster: Cluster, workers: Sequence[WorkerSpec],
             oc = staged_counts.setdefault(best.name, {})
             oc[key_w] = oc.get(key_w, 0) + 1
         if score_index is not None:
-            staged_idx.add(cluster.node_index(best.name))
+            idx_b = cluster.node_index(best.name)
+            staged_idx.add(idx_b)
+            if packing:
+                staged_sw.add(score_index.switch_of[idx_b])
+                gang_left -= need
         placed.append(w)
 
     if commit:

@@ -1,0 +1,333 @@
+"""Network-topology layer: node -> rack switch -> spine, with contention.
+
+The flat speed model charges NETWORK-class gangs one global
+``net_internode`` penalty per extra node (``estimates.job_speed``) —
+placement cannot distinguish two workers under one switch from two
+workers across the spine, which is exactly the signal rank-aware
+scheduling for tightly-coupled MPI gangs exploits.  This module models
+the fabric explicitly, the way Helix's ``ClusterSimulator`` models
+``NetworkLink`` objects: a two-level tree of *links*, each with a
+relative bandwidth and live traffic accounting.
+
+Link classes (keys are ``(kind, id)`` tuples):
+
+* ``("leaf", node name)`` — the node's access link to its rack switch.
+  Bandwidth 1.0 by convention: ``Cluster.inter_bw`` (cross-node within a
+  rack) is the reference class ``PerfParams.net_internode`` was
+  calibrated on.
+* ``("up", switch id)`` — the rack switch's uplink into the pod spine,
+  shared by every gang in the rack that spans switches.  Default
+  bandwidth ``sqrt(cross_pod_bw / inter_bw)`` — the geometric mean of
+  the two fabrics it bridges (a ~3.5:1 rack oversubscription on the
+  fleet defaults).
+* ``("spine", pod id)`` — the pod's DCN attachment, used only by gangs
+  spanning pods.  Default bandwidth ``cross_pod_bw / inter_bw``.
+
+``Cluster.intra_bw`` scales the *multi-worker* term instead (shared
+memory / intra-host ICI): ``1 + (net_multiworker - 1) / intra_bw``.
+All three previously-dead ``Cluster`` bandwidth fields are live inputs.
+
+**Traffic accounting** (Helix-``NetworkLink`` style): when a NETWORK
+gang spanning more than one node starts, each link on its communication
+paths registers the gang's task count crossing it; teardown (finish,
+kill, preemption, node failure — everything routed through
+``Simulator._on_stop`` — and the fault engine's elastic ``_shrink``)
+releases it.  A link's *stress* is ``max(1, traffic / capacity) / bw``
+with ``capacity = bw * TopologyConfig.link_tasks``: at no saturation it
+is exactly the hop penalty ``1 / bw``, under contention it grows with
+the oversubscription.  The gang's internode factor becomes::
+
+    1 + net_internode * (n_nodes - 1) * max(stress over its links)
+
+so a gang packed under one switch (leaf links only, bw 1.0, generous
+capacity) pays exactly the flat model's penalty, while a gang scattered
+across racks pays the uplink hop *and* shares that uplink's capacity
+with every other scattered gang — prediction and execution read the
+same model (``Simulator._speed`` and the contention estimator both call
+the pure ``estimates.job_speed`` with the topology's ``net`` factors).
+
+**Placement** (infrastructure layer): with ``TopologyConfig.packing``
+the task-group binder prefers packing a NETWORK gang's workers under
+one switch — served by the per-switch dimension of
+``taskgroup.ScoreIndex`` (same lazy-bucket structure per subtree, plus
+an aggregate per-switch free-capacity heap), so admission stays
+O(polylog N).  ``rank_aware`` orders a gang's workers by rank at
+placement time, so adjacent ranks land topology-adjacent under the
+binder's affinity scoring.  Packing is an indexed-path feature: the
+legacy (``use_index=False``) binder places topology-blind, but executes
+under the same topology speed model.
+
+Everything is gated on ``Scenario.topology is None`` (the default):
+with no config the simulator takes no topology branch anywhere and
+every pre-topology golden trace hash stays byte-identical.  A
+*degenerate* topology — one switch, ``packing=False``,
+``rank_aware=False``, huge ``link_tasks`` — reproduces the flat model
+exactly (float-for-float; property-tested in ``tests/test_topology.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.profiles import Profile
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyConfig:
+    """Scenario-level switch/spine tree parameters (``Scenario.topology``).
+
+    ``hosts_per_switch`` chunks each pod's nodes (in cluster order) into
+    rack switches when the nodes carry no explicit ``Node.switch`` id.
+    ``link_tasks`` is the task count a reference (bw = 1.0) link carries
+    at full speed — each link's capacity is ``bw * link_tasks``.
+    ``leaf_bw`` / ``uplink_bw`` / ``spine_bw`` override the defaults
+    derived from the cluster's ``intra_bw / inter_bw / cross_pod_bw``
+    fields (see the module docstring).  ``packing`` turns the
+    topology-aware placement score on (pack a NETWORK gang under one
+    switch); ``rank_aware`` orders gang workers by rank at placement.
+    The speed model is active either way — benchmarks compare
+    topology-*blind* (``packing=False``) against topology-*packed*
+    placement under identical physics."""
+
+    hosts_per_switch: int = 8
+    # reference-link capacity in tasks: sized above a single rack-scale
+    # gang (8 hosts x 4 chips = 32 tasks), so one gang's own traffic
+    # never saturates a link — stress starts at the pure hop penalty
+    # ``1/bw`` and grows only when *multiple* gangs share an uplink
+    link_tasks: float = 64.0
+    leaf_bw: Optional[float] = None
+    uplink_bw: Optional[float] = None
+    spine_bw: Optional[float] = None
+    packing: bool = True
+    rank_aware: bool = True
+
+
+def make_topology(sim) -> Optional["NetworkTopology"]:
+    """Resolve a simulator's scenario to a topology instance, or None
+    when the layer is off (``Scenario.topology is None`` — every hook
+    in the engine is gated on this, keeping flat traces byte-identical)."""
+    cfg = sim.sc.topology
+    if cfg is None:
+        return None
+    return NetworkTopology(sim, cfg)
+
+
+class NetworkTopology:
+    """Per-simulator switch/spine tree + live per-link traffic registry.
+
+    ``traffic[link] -> tasks`` and ``users[link] -> {JobRun}`` are
+    maintained by :meth:`on_start` / :meth:`on_stop` (called from the
+    simulator's start/teardown bookkeeping and the fault engine's
+    elastic shrink).  Registering or releasing a gang marks every
+    *other* gang sharing one of its links dirty, so the event loop's
+    dirty-set refresh re-prices exactly the gangs whose bottleneck
+    moved — link contention is time-varying the same way memory
+    bandwidth already is.
+    """
+
+    def __init__(self, sim, cfg: TopologyConfig):
+        self.sim = sim
+        self.cfg = cfg
+        cluster = sim.cluster
+        nodes = cluster.nodes
+        # node -> switch: explicit ``Node.switch`` ids when every node
+        # carries one (fleet_cluster / hetero_cluster construct them),
+        # else pods chunked in cluster order
+        if nodes and all(n.switch is not None for n in nodes):
+            switch_idx = [int(n.switch) for n in nodes]
+        else:
+            hps = max(1, cfg.hosts_per_switch)
+            state: Dict[int, list] = {}    # pod -> [switch id, fill]
+            next_sw = 0
+            switch_idx = []
+            for n in nodes:
+                st = state.get(n.pod)
+                if st is None or st[1] >= hps:
+                    st = state[n.pod] = [next_sw, 0]
+                    next_sw += 1
+                st[1] += 1
+                switch_idx.append(st[0])
+        self.switch_idx: List[int] = switch_idx   # by cluster node index
+        self.switch_of: Dict[str, int] = {}       # by node name
+        self.pod_of: Dict[int, int] = {}          # switch -> pod
+        per_sw: Dict[int, int] = {}
+        for i, n in enumerate(nodes):
+            s = switch_idx[i]
+            self.switch_of[n.name] = s
+            self.pod_of.setdefault(s, n.pod)
+            per_sw[s] = per_sw.get(s, 0) + 1
+        self.n_switches = len(per_sw)
+        self._max_sw_hosts = max(per_sw.values()) if per_sw else 1
+        # link bandwidths relative to the inter_bw reference (leaf = 1.0)
+        inter = cluster.inter_bw if cluster.inter_bw > 0 else 1.0
+        cross = cluster.cross_pod_bw if cluster.cross_pod_bw > 0 else inter
+        intra = cluster.intra_bw if cluster.intra_bw > 0 else 1.0
+        self.bw: Dict[str, float] = {
+            "leaf": cfg.leaf_bw if cfg.leaf_bw is not None else 1.0,
+            "up": (cfg.uplink_bw if cfg.uplink_bw is not None
+                   else min(1.0, math.sqrt(cross / inter))),
+            "spine": (cfg.spine_bw if cfg.spine_bw is not None
+                      else min(1.0, cross / inter)),
+        }
+        self._intra = 1.0 / intra
+        self.packing = cfg.packing
+        self.rank_aware = cfg.rank_aware
+        self.traffic: Dict[tuple, int] = {}
+        self.users: Dict[tuple, set] = {}
+
+    # ---------------- link enumeration -------------------------------------
+    def _links_for(self, nodes: Dict[str, int]) -> List[tuple]:
+        """The ``(link key, tasks crossing)`` list for a gang placed on
+        ``nodes`` (name -> tasks): each node's leaf link; the involved
+        switches' uplinks when the gang spans switches; the involved
+        pods' spine links when it spans pods."""
+        links = []
+        sw_tasks: Dict[int, int] = {}
+        switch_of = self.switch_of
+        for name, tasks in nodes.items():
+            links.append((("leaf", name), tasks))
+            s = switch_of[name]
+            sw_tasks[s] = sw_tasks.get(s, 0) + tasks
+        if len(sw_tasks) > 1:
+            pod_tasks: Dict[int, int] = {}
+            pod_of = self.pod_of
+            for s, t in sw_tasks.items():
+                links.append((("up", s), t))
+                p = pod_of[s]
+                pod_tasks[p] = pod_tasks.get(p, 0) + t
+            if len(pod_tasks) > 1:
+                for p, t in pod_tasks.items():
+                    links.append((("spine", p), t))
+        return links
+
+    # ---------------- registration (Simulator._on_start/_on_stop hooks) ----
+    def on_start(self, jr, dirty: Optional[set]):
+        """Register a starting gang's traffic on every link it uses and
+        dirty the other gangs sharing those links (their bottleneck
+        stress changed).  Single-node or non-NETWORK gangs use no
+        inter-node links and register nothing."""
+        if jr.job.profile is not Profile.NETWORK:
+            return
+        nodes = jr.nodes_used
+        if len(nodes) <= 1:
+            return
+        perf = self.sim.perf
+        t0 = time.perf_counter()
+        links = self._links_for(nodes)
+        traffic, users = self.traffic, self.users
+        lt = self.cfg.link_tasks
+        bwmap = self.bw
+        for key, amt in links:
+            new = traffic.get(key, 0) + amt
+            traffic[key] = new
+            us = users.get(key)
+            if us is None:
+                users[key] = {jr}
+                continue
+            # co-users' stress through this link moved only if the link
+            # is now oversubscribed (below capacity it is the constant
+            # hop penalty 1/bw) — skip the dirty ripple otherwise
+            if dirty is not None and new > bwmap[key[0]] * lt:
+                for u in us:
+                    un = u._nodes
+                    if un:
+                        dirty.update(un)
+            us.add(jr)
+        jr._net_links = links
+        perf["topo_registers"] += 1
+        perf["topo_s"] += time.perf_counter() - t0
+
+    def on_stop(self, jr, dirty: Optional[set]):
+        """Release a stopping gang's registered traffic — the exact
+        inverse of :meth:`on_start` (task counts are integers, so the
+        registry drains to exactly zero)."""
+        links = jr._net_links
+        if not links:
+            return
+        perf = self.sim.perf
+        t0 = time.perf_counter()
+        traffic, users = self.traffic, self.users
+        lt = self.cfg.link_tasks
+        bwmap = self.bw
+        for key, amt in links:
+            old = traffic.get(key, 0)
+            left = old - amt
+            if left > 0:
+                traffic[key] = left
+            else:
+                traffic.pop(key, None)
+            us = users.get(key)
+            if us is not None:
+                us.discard(jr)
+                if not us:
+                    del users[key]
+                elif dirty is not None and old > bwmap[key[0]] * lt:
+                    # the link was oversubscribed: the survivors' stress
+                    # just dropped — re-price them.  Below capacity the
+                    # release changes nothing (constant hop penalty).
+                    for u in us:
+                        un = u._nodes
+                        if un:
+                            dirty.update(un)
+        jr._net_links = None
+        perf["topo_releases"] += 1
+        perf["topo_s"] += time.perf_counter() - t0
+
+    # ---------------- speed-model inputs ------------------------------------
+    def stress(self, jr) -> float:
+        """Bottleneck stress over the gang's registered links:
+        ``max(1, traffic / capacity) / bw`` — the hop penalty ``1/bw``
+        at no saturation, growing once the link is oversubscribed.
+        1.0 for gangs using no inter-node links."""
+        links = jr._net_links
+        if not links:
+            return 1.0
+        traffic = self.traffic
+        lt = self.cfg.link_tasks
+        bwmap = self.bw
+        worst = 1.0
+        for key, amt in links:
+            bw = bwmap[key[0]]
+            s = max(1.0, traffic.get(key, amt) / (bw * lt)) / bw
+            if s > worst:
+                worst = s
+        return worst
+
+    def net_factors(self, jr) -> Tuple[float, float]:
+        """The ``net`` pair ``estimates.job_speed`` consumes for a
+        *placed* NETWORK gang: ``(intra scale, bottleneck stress)``."""
+        return (self._intra, self.stress(jr))
+
+    def queued_net(self, n_nodes: int) -> Tuple[float, float]:
+        """Optimistic ``net`` pair for a *queued* gang (placement
+        unknown — the contention estimator's backfill-window query):
+        best-case packing of ``n_nodes`` nodes, no saturation."""
+        if n_nodes <= 1:
+            return (self._intra, 1.0)
+        n_sw = -(-n_nodes // self._max_sw_hosts)
+        if n_sw <= 1:
+            return (self._intra, 1.0)
+        return (self._intra, 1.0 / self.bw["up"])
+
+    # ---------------- invariants (tests / audits) ---------------------------
+    def pending_traffic(self) -> Dict[tuple, int]:
+        """Non-zero link traffic currently registered (empty once every
+        gang has torn down — the conservation invariant)."""
+        return {k: v for k, v in self.traffic.items() if v}
+
+    def expected_traffic(self) -> Dict[tuple, int]:
+        """Recompute what the registry *should* hold from the running
+        set's current placements — the audit oracle for the fault paths
+        (elastic shrink, domain blasts) in ``tests/test_topology.py``."""
+        exp: Dict[tuple, int] = {}
+        for jr in self.sim.running:
+            if jr.job.profile is not Profile.NETWORK:
+                continue
+            nodes = jr.nodes_used
+            if len(nodes) <= 1:
+                continue
+            for key, amt in self._links_for(nodes):
+                exp[key] = exp.get(key, 0) + amt
+        return exp

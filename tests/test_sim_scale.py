@@ -267,6 +267,9 @@ def test_perf_counters_populated_and_consistent(legacy):
     assert 0.0 <= phases <= p["wall_s"] + 1e-6    # phases nest in the loop
     assert phases >= 0.5 * p["wall_s"]            # ... and cover it
     assert 0.0 <= p["reserve_s"] <= p["admit_s"] + 1e-9  # nested slice
+    # topology counters exist and stay zero with the layer off
+    assert p["topo_registers"] == p["topo_releases"] == 0
+    assert p["topo_packed_places"] == 0 and p["topo_s"] == 0.0
 
 
 def test_benchmark_surfaces_perf_counters():
@@ -274,9 +277,15 @@ def test_benchmark_surfaces_perf_counters():
     r = sim_scale.run_once(32, 60, seed=0, scenario="FLEET_EASY")
     perf = r["perf"]
     for key in ("heap_s", "admit_s", "refresh_s", "reserve_s",
-                "admit_calls", "place_attempts", "reservations"):
+                "admit_calls", "place_attempts", "reservations",
+                "topo_s", "topo_registers", "topo_packed_places"):
         assert key in perf
     assert perf["admit_calls"] == r["events"]
+    assert perf["topo_registers"] == 0        # topology off in FLEET_EASY
+    # ... and live in FLEET_TOPO (4-task net gangs co-locate onto one
+    # 4-chip host, so packing engages even when no gang spans a link)
+    r2 = sim_scale.run_once(32, 60, seed=0, scenario="FLEET_TOPO")
+    assert r2["perf"]["topo_packed_places"] > 0
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,398 @@
+"""Network-topology layer: gating, link physics, packing, conservation.
+
+Four layers of guarantees:
+
+* **Topology-off is not a behaviour change**: with ``Scenario.topology``
+  explicitly ``None`` the engine takes no topology branch anywhere —
+  every pre-topology golden trace hash (scenario x seed x job_ids x
+  failures) is byte-identical with the layer merely importable.
+* **Degenerate topology is the flat model** (property, twin-run): one
+  switch, huge link capacity, packing off — trace hashes equal the
+  ``topology=None`` run exactly, float for float, on both event loops,
+  while the link registry demonstrably runs (registers == releases > 0).
+* **Index correctness**: the per-switch ScoreIndex dimension matches a
+  brute-force argmax under random bind/unbind/capacity churn, and the
+  packed binder lands a rack-sized NETWORK gang under one switch.
+* **Conservation**: link traffic drains to exactly zero after any run —
+  including scripted node failures and the stochastic fault engine's
+  domain blasts and elastic shrinks, audited mid-run against the
+  recomputed placement oracle (``NetworkTopology.expected_traffic``).
+"""
+import dataclasses as dc
+import random
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import faults as FLT
+from repro.core import taskgroup as TG
+from repro.core.cluster import Cluster, Node, fleet_cluster, hetero_cluster, \
+    paper_cluster
+from repro.core.controller import WorkerSpec
+from repro.core.profiles import Profile, Workload
+from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
+from repro.core.simulator import PerfParams, Simulator
+from repro.core.topology import NetworkTopology, TopologyConfig
+
+from test_queues import (GOLDEN_FLEET, GOLDEN_PAPER, GOLDEN_REMAINING,
+                         exp2_subs, small_fleet, trace_hash)
+
+pytestmark = pytest.mark.topo
+
+
+# wide NETWORK gangs on 4-slot hosts: they must span nodes (and racks),
+# so the link registry genuinely runs — 4-task gangs co-locate onto one
+# host and register nothing
+WIDE_NET = (
+    Workload("net-16", Profile.NETWORK, 16, 90.0),
+    Workload("net-32", Profile.NETWORK, 32, 120.0),
+    Workload("cpu-16", Profile.CPU, 16, 150.0),
+    Workload("mem-8", Profile.MEMORY, 8, 90.0),
+)
+
+# one switch (chunking swallows the fleet), capacity no gang can dent,
+# placement hooks off: provably the flat model, float for float
+DEGENERATE = TopologyConfig(hosts_per_switch=10 ** 6, link_tasks=1e9,
+                            packing=False, rank_aware=False)
+
+
+def _topo_sim(cluster, seed, topology, **scn_kw):
+    scn = dc.replace(SCENARIOS["FLEET_TOPO"], topology=topology, **scn_kw)
+    return Simulator(cluster, scn, seed=seed)
+
+
+# ----------------------------------------------------------------------
+# topology=None is not a behaviour change: golden re-pins with the field
+# set *explicitly* (not defaulted), across scenario x seed x job_ids x
+# failures — the same hashes test_queues pins for the pre-topology tree
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("scn,seed,want", GOLDEN_PAPER)
+def test_topology_none_paper_traces_byte_identical(scn, seed, want):
+    scenario = dc.replace(SCENARIOS[scn], topology=None)
+    sim = Simulator(paper_cluster(), scenario, seed=seed)
+    assert sim.topo is None
+    done = sim.run(exp2_subs(seed))
+    assert trace_hash(sim, done) == want
+
+
+@pytest.mark.parametrize("scn,want", GOLDEN_FLEET)
+def test_topology_none_fleet_traces_byte_identical(scn, want):
+    subs = poisson_heavy_traffic(100, 64, seed=3, unique_names=False)
+    sim = Simulator(small_fleet(16),
+                    dc.replace(SCENARIOS[scn], topology=None), seed=0)
+    done = sim.run(list(subs))
+    assert trace_hash(sim, done) == want
+
+
+@pytest.mark.parametrize(
+    "scn,seed,failures,mode,want",
+    [row for row in GOLDEN_REMAINING
+     if row[0] in ("CM_G_TG", "CM_G_TG_EASY")])
+def test_topology_none_job_ids_failure_matrix(scn, seed, failures, mode,
+                                              want):
+    scenario = dc.replace(SCENARIOS[scn], job_ids=mode,
+                          estimator="remaining", topology=None)
+    sim = Simulator(paper_cluster(), scenario, seed=seed)
+    if failures:
+        sim.failures = [(200.0, "node0", 300.0), (450.0, "node1", 200.0)]
+    done = sim.run(exp2_subs(seed))
+    assert trace_hash(sim, done) == want
+
+
+# ----------------------------------------------------------------------
+# degenerate topology == flat model: exact twin-run over seeds
+# ----------------------------------------------------------------------
+def _twin(topology, seed, legacy=False):
+    cluster = small_fleet(16)
+    subs = poisson_heavy_traffic(50, cluster.total_slots, seed=seed,
+                                 utilization=0.8, workloads=WIDE_NET)
+    sim = _topo_sim(cluster, seed, topology)
+    done = sim.run(list(subs), legacy=legacy)
+    return trace_hash(sim, done), sim
+
+
+@pytest.mark.property
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_degenerate_topology_equals_flat_model(seed):
+    """One switch + unsaturable links + no packing must reproduce the
+    ``topology=None`` trace exactly (``job_speed``'s net branches are
+    float-identical at ``net=(1.0, 1.0)``) — while the registry runs."""
+    flat_hash, _ = _twin(None, seed)
+    topo_hash, sim = _twin(DEGENERATE, seed)
+    assert topo_hash == flat_hash
+    assert sim.perf["topo_registers"] > 0
+    assert sim.perf["topo_registers"] == sim.perf["topo_releases"]
+    assert sim.topo.pending_traffic() == {}
+    assert sim.perf["topo_packed_places"] == 0      # packing off
+
+
+def test_degenerate_topology_equals_flat_on_legacy_loop():
+    assert _twin(DEGENERATE, 7, legacy=True)[0] == \
+        _twin(None, 7, legacy=True)[0]
+
+
+# ----------------------------------------------------------------------
+# tree construction + link physics (unit level)
+# ----------------------------------------------------------------------
+def test_fleet_cluster_builds_switch_spine_tree():
+    cluster = fleet_cluster(2, 16)      # 2 pods x 16 hosts, racks of 8
+    sim = _topo_sim(cluster, 0, TopologyConfig())
+    topo = sim.topo
+    assert topo.n_switches == 4
+    assert topo.switch_of["pod0-host0"] == topo.switch_of["pod0-host7"]
+    assert topo.switch_of["pod0-host7"] != topo.switch_of["pod0-host8"]
+    assert topo.pod_of[topo.switch_of["pod1-host0"]] == 1
+    # dead Cluster bandwidth fields are live link-bandwidth inputs
+    assert topo.bw["leaf"] == 1.0
+    assert topo.bw["up"] == pytest.approx((0.05 / 0.6) ** 0.5)
+    assert topo.bw["spine"] == pytest.approx(0.05 / 0.6)
+    assert topo._intra == 1.0
+
+
+def test_chunking_fallback_when_nodes_carry_no_switch():
+    cluster = small_fleet(16)           # no Node.switch anywhere
+    topo = _topo_sim(cluster, 0, TopologyConfig(hosts_per_switch=4)).topo
+    assert topo.n_switches == 4
+    assert topo.switch_of["h0"] == topo.switch_of["h3"]
+    assert topo.switch_of["h3"] != topo.switch_of["h4"]
+
+
+def test_hetero_cluster_racks_in_build_order():
+    topo = _topo_sim(hetero_cluster(((8, 4), (8, 32)), hosts_per_switch=4),
+                     0, TopologyConfig()).topo
+    assert topo.n_switches == 4
+    assert topo.switch_of["h0"] == topo.switch_of["h3"] == 0
+    assert topo.switch_of["h12"] == 3
+
+
+def test_links_for_rack_pod_and_spine_tiers():
+    topo = _topo_sim(fleet_cluster(2, 16), 0, TopologyConfig()).topo
+    # packed under one switch: leaf links only
+    links = dict(topo._links_for({"pod0-host0": 2, "pod0-host1": 2}))
+    assert links == {("leaf", "pod0-host0"): 2, ("leaf", "pod0-host1"): 2}
+    # spans two racks of one pod: + per-switch uplinks, no spine
+    links = dict(topo._links_for({"pod0-host0": 3, "pod0-host8": 1}))
+    s0, s8 = topo.switch_of["pod0-host0"], topo.switch_of["pod0-host8"]
+    assert links[("up", s0)] == 3 and links[("up", s8)] == 1
+    assert not any(k[0] == "spine" for k in links)
+    # spans pods: + per-pod spine links carrying each pod's tasks
+    links = dict(topo._links_for({"pod0-host0": 3, "pod1-host0": 5}))
+    assert links[("spine", 0)] == 3 and links[("spine", 1)] == 5
+
+
+def test_stress_is_hop_penalty_then_saturation():
+    topo = _topo_sim(fleet_cluster(2, 16), 0,
+                     TopologyConfig(link_tasks=16.0)).topo
+
+    class Gang:
+        _net_links = [(("up", 0), 8)]
+
+    up_bw = topo.bw["up"]
+    topo.traffic[("up", 0)] = 8          # under capacity (16 * bw? no:
+    # capacity = bw * link_tasks ~ 4.6 tasks -> 8 tasks oversubscribes
+    cap = up_bw * 16.0
+    want = max(1.0, 8 / cap) / up_bw
+    assert topo.stress(Gang()) == pytest.approx(want)
+    topo.traffic[("up", 0)] = 2          # below capacity: pure hop penalty
+    Gang._net_links = [(("up", 0), 2)]
+    assert topo.stress(Gang()) == pytest.approx(1.0 / up_bw)
+    topo.traffic.clear()
+
+
+def test_queued_net_is_optimistic_best_packing():
+    topo = _topo_sim(fleet_cluster(2, 16), 0, TopologyConfig()).topo
+    assert topo.queued_net(1) == (1.0, 1.0)
+    assert topo.queued_net(8) == (1.0, 1.0)          # fits one rack
+    intra, stress = topo.queued_net(9)               # must span racks
+    assert stress == pytest.approx(1.0 / topo.bw["up"])
+
+
+# ----------------------------------------------------------------------
+# per-switch ScoreIndex dimension vs brute force, under random churn
+# ----------------------------------------------------------------------
+def _brute_plain(cluster, bound, need, staged, sw_of, switch,
+                 reserved=None):
+    best = None
+    for i, n in enumerate(cluster.nodes):
+        if switch is not None and sw_of[i] != switch:
+            continue
+        if i in staged:
+            continue
+        free = n.n_slots - n.used
+        if free < need:
+            continue
+        if reserved is not None and free - reserved.get(i, 0) < need:
+            continue
+        t = (len(bound.counts.get(n.name, ())), i)
+        if best is None or t < best:
+            best = t
+    return best
+
+
+def _brute_switch(cluster, sw_of, need):
+    free = {}
+    for i, n in enumerate(cluster.nodes):
+        free[sw_of[i]] = free.get(sw_of[i], 0) + n.n_slots - n.used
+    sw, best = max(free.items(), key=lambda kv: (kv[1], -kv[0]))
+    return sw if best >= need else None
+
+
+@pytest.mark.property
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_score_index_switch_dimension_matches_brute_force(seed):
+    """Random bind/unbind + capacity churn on a racked fleet: the lazy
+    per-switch buckets, the per-switch aggregate heap and the global walk
+    must all agree with a from-scratch recomputation at every probe."""
+    rng = random.Random(seed)
+    n_nodes, rack = 48, 8
+    cluster = Cluster([Node(f"n{i}", n_slots=6, n_domains=1)
+                       for i in range(n_nodes)])
+    bound = TG.BoundIndex()
+    sw_of = [i // rack for i in range(n_nodes)]
+    si = TG.ScoreIndex(cluster, bound, switch_of=sw_of)
+    live = []
+    for step in range(240):
+        op = rng.random()
+        if op < 0.45 or not live:
+            node = cluster.nodes[rng.randrange(n_nodes)]
+            w = WorkerSpec(job=f"j{rng.randrange(6)}", index=step,
+                           n_tasks=1, cpu=1.0, memory=1.0, node=node.name,
+                           uid=f"u{rng.randrange(6)}")
+            bound.add(w)
+            live.append(w)
+            if node.used < node.n_slots:
+                node.used += 1
+        elif op < 0.8:
+            w = live.pop(rng.randrange(len(live)))
+            bound.remove(w)
+            node = cluster.node(w.node)
+            if node.used > 0:
+                node.used -= 1
+        else:
+            cluster.nodes[rng.randrange(n_nodes)].used = rng.randrange(7)
+        if step % 7:
+            continue
+        need = rng.randrange(1, 5)
+        staged = {rng.randrange(n_nodes)
+                  for _ in range(rng.randrange(4))}
+        reserved = ({rng.randrange(n_nodes): rng.randrange(1, 4)}
+                    if rng.random() < 0.5 else None)
+        sw = rng.randrange(n_nodes // rack)
+        assert si.best_plain(need, staged, reserved, switch=sw) == \
+            _brute_plain(cluster, bound, need, staged, sw_of, sw, reserved)
+        assert si.best_plain(need, staged, reserved) == \
+            _brute_plain(cluster, bound, need, staged, sw_of, None,
+                         reserved)
+        agg_need = rng.randrange(1, 40)
+        assert si.best_switch(agg_need) == \
+            _brute_switch(cluster, sw_of, agg_need)
+
+
+def test_packed_binder_lands_gang_under_one_switch():
+    """A rack-sized NETWORK gang goes to the one switch that can hold it
+    whole, not to the low-index partially-busy rack the blind walk
+    prefers."""
+    cluster = fleet_cluster(1, 16)      # 2 racks of 8 x 4 slots
+    for i in range(4):                  # rack 0 partially busy
+        cluster.nodes[i].used = 2
+    bound = TG.BoundIndex()
+    sw_of = [n.switch for n in cluster.nodes]
+    si = TG.ScoreIndex(cluster, bound, switch_of=sw_of)
+    workers = [WorkerSpec(job="gang", index=i, n_tasks=1, cpu=1.0,
+                          memory=1.0, uid="g1") for i in range(32)]
+    ok = TG.schedule_job(cluster, workers, 1, bound=bound, use_index=True,
+                         plan=TG.make_plan(workers, 1), score_index=si,
+                         topo_pack=object())
+    assert ok
+    placed_sw = {sw_of[cluster.node_index(w.node)] for w in workers}
+    assert placed_sw == {1}
+
+
+def test_packing_never_narrows_feasibility():
+    """When no single switch fits the gang, the packed binder falls back
+    to the global walk — the gang still places."""
+    cluster = fleet_cluster(1, 16)
+    for n in cluster.nodes:             # 2 free slots everywhere
+        n.used = 2
+    bound = TG.BoundIndex()
+    si = TG.ScoreIndex(cluster, bound,
+                       switch_of=[n.switch for n in cluster.nodes])
+    workers = [WorkerSpec(job="gang", index=i, n_tasks=1, cpu=1.0,
+                          memory=1.0, uid="g2") for i in range(24)]
+    assert TG.schedule_job(cluster, workers, 1, bound=bound,
+                           use_index=True, plan=TG.make_plan(workers, 1),
+                           score_index=si, topo_pack=object())
+
+
+# ----------------------------------------------------------------------
+# conservation: the registry drains to zero — plain, scripted failures,
+# and the stochastic fault engine (domain blasts + elastic shrinks)
+# audited mid-run against the placement oracle
+# ----------------------------------------------------------------------
+def _heavy_net_run(seed, failures=None, **scn_kw):
+    cluster = fleet_cluster(2, 16)
+    subs = poisson_heavy_traffic(60, cluster.total_slots, seed=seed,
+                                 utilization=0.9, workloads=WIDE_NET,
+                                 elastic_frac=scn_kw.pop("elastic_frac",
+                                                         0.0))
+    sim = _topo_sim(cluster, seed, TopologyConfig(),
+                    perf=PerfParams(net_internode=0.25), **scn_kw)
+    if failures:
+        sim.failures = list(failures)
+    done = sim.run(list(subs))
+    return sim, done
+
+
+def test_link_traffic_conservation_plain_run():
+    sim, done = _heavy_net_run(2)
+    assert sim.perf["topo_registers"] > 0
+    assert sim.perf["topo_registers"] == sim.perf["topo_releases"]
+    assert sim.topo.pending_traffic() == {}
+    assert sim.perf["topo_packed_places"] > 0
+
+
+def test_link_traffic_conservation_with_scripted_failures():
+    sim, done = _heavy_net_run(
+        3, failures=[(60.0, "pod0-host1", 300.0),
+                     (120.0, "pod1-host3", 200.0),
+                     (200.0, "pod0-host9", 250.0)])
+    assert sim.perf["topo_registers"] > 0
+    assert sim.topo.pending_traffic() == {}
+    assert sim.perf["topo_registers"] == sim.perf["topo_releases"]
+
+
+@pytest.mark.faults
+def test_fault_engine_leaves_no_stale_link_traffic(monkeypatch):
+    """Domain blasts (whole-pod ``_take_down`` storms) and elastic
+    shrinks (the one teardown that bypasses ``_on_stop``) must leave the
+    registry exactly matching the running set's placements — audited
+    after every fault-engine teardown, not just at drain."""
+    orig_shrink = FLT.FaultEngine._shrink
+    orig_down = FLT.FaultEngine._take_down
+    audits = {"shrink": 0, "down": 0}
+
+    def shrink(self, jr, node_name, dirty):
+        orig_shrink(self, jr, node_name, dirty)
+        topo = self.sim.topo
+        assert topo.pending_traffic() == topo.expected_traffic()
+        audits["shrink"] += 1
+
+    def down(self, name, repair, dirty, avoid=None):
+        orig_down(self, name, repair, dirty, avoid=avoid)
+        topo = self.sim.topo
+        assert topo.pending_traffic() == topo.expected_traffic()
+        audits["down"] += 1
+
+    monkeypatch.setattr(FLT.FaultEngine, "_shrink", shrink)
+    monkeypatch.setattr(FLT.FaultEngine, "_take_down", down)
+    sim, done = _heavy_net_run(
+        5, elastic_frac=1.0,
+        faults=FLT.FaultConfig(node_mtbf=6_000.0, domain_mtbf=4_000.0,
+                               domain_repair=400.0),
+        resilience=FLT.ResiliencePolicy(backoff_base=0.0, daly=False))
+    assert audits["down"] > 0 and audits["shrink"] > 0
+    assert sim.perf["domain_faults"] > 0 and sim.perf["shrinks"] > 0
+    assert sim.topo.pending_traffic() == {}
+    assert sim.perf["topo_registers"] == sim.perf["topo_releases"]
