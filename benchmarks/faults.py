@@ -25,6 +25,24 @@ The acceptance property (checked and recorded in the JSON): the full
 at >= 2 of the swept fault rates.
 
   python -m benchmarks.faults [--smoke] [--seeds N] [--out PATH]
+
+The ``--recovery`` sweep (also embedded in the default run's JSON under
+``"recovery"``) compares the PR-6 ``resilient`` policy against the
+recovery-complete arms on a 128-host two-pod fleet with *link* faults
+layered on top of node/domain faults, elastic gangs and tenant
+priorities, skip-ahead admission and gang preemption on everywhere so
+the arms differ only in the recovery features:
+
+* ``resilient``     — everything PR-6 had (retry/drain/Daly/shrink);
+* ``regrow``        — plus elastic regrowth back to full width;
+* ``resume``        — plus resume-reservations for preemption victims;
+* ``regrow+resume`` — both.
+
+Each arm records goodput, wasted work, mean response and
+time-to-full-width (mean ``regrow_wait_s`` per regrow).  The recovery
+acceptance row: ``regrow+resume`` beats ``resilient`` on *both* goodput
+and mean response at >= 2 of the swept MTBFs, and the link-only rows
+(node/domain faults off) complete with zero jobs lost.
 """
 from __future__ import annotations
 
@@ -120,6 +138,211 @@ def run_once(n_hosts: int, n_jobs: int, seed: int, mtbf: float,
     }
 
 
+# ----------------------------------------------------------------------
+# --recovery: link faults x regrowth x resume-reservations on the
+# two-pod fleet (the recovery-complete acceptance sweep)
+# ----------------------------------------------------------------------
+# Per-node MTBFs are fleet-scaled: the 128-host fleet is 4x the 32-host
+# policy sweep, so the per-node rates are scaled x4 to keep fleet-wide
+# fault pressure (faults per wall-second across the cluster) comparable.
+RECOVERY_FULL = {"pods": 2, "hosts_per_pod": 64, "jobs": 200, "seeds": 3,
+                 "mtbfs": (120_000.0, 36_000.0, 14_000.0)}
+RECOVERY_SMOKE = {"pods": 2, "hosts_per_pod": 8, "jobs": 50, "seeds": 1,
+                  "mtbfs": (9_000.0,)}
+LINK_ONLY_MTBF = 4_000.0  # per-link, for the zero-jobs-lost rows
+
+
+def recovery_fleet(n_pods: int, hosts_per_pod: int,
+                   hosts_per_switch: int = 8) -> Cluster:
+    """The two-pod fleet with a *fat-tree* spine (cross-pod bandwidth
+    close to in-rack).  The default fleet's 20:1 oversubscribed spine
+    makes one unlucky cross-pod NETWORK placement a ~1000x straggler —
+    that is the placement-quality axis (PR 7's net_topo benchmark), and
+    letting it dominate here would drown the recovery comparison in
+    placement noise.  Link *faults* still bite: an unhealthy link scales
+    whatever bandwidth the tier has."""
+    sw_per_pod = -(-hosts_per_pod // hosts_per_switch)
+    nodes = [Node(f"pod{p}-host{h}", n_slots=4, n_domains=1, pod=p,
+                  switch=p * sw_per_pod + h // hosts_per_switch)
+             for p in range(n_pods) for h in range(hosts_per_pod)]
+    return Cluster(nodes, intra_bw=1.0, inter_bw=0.8, cross_pod_bw=0.6)
+
+
+def recovery_fault_config(mtbf: float, link_only: bool = False
+                          ) -> FaultConfig:
+    """Node+domain faults as in the policy sweep, plus per-link faults.
+    ``link_only`` turns the node/domain injectors off entirely — links
+    never kill placements, so those runs must lose zero jobs."""
+    if link_only:
+        return dataclasses.replace(
+            fault_config(20_000.0), node_mtbf=0.0, domain_mtbf=0.0,
+            link_mtbf=mtbf, link_repair=600.0)
+    return dataclasses.replace(fault_config(mtbf), link_mtbf=2.0 * mtbf,
+                               link_repair=600.0)
+
+
+def recovery_arms():
+    """``resilient`` is PR-6's full policy; the other arms add the
+    recovery features one at a time, everything else identical."""
+    base = ResiliencePolicy(max_retries=8)
+    return [
+        ("resilient", base, False),
+        ("regrow", dataclasses.replace(base, regrow=True), False),
+        ("resume", base, True),
+        ("regrow+resume", dataclasses.replace(base, regrow=True), True),
+    ]
+
+
+def run_recovery_once(cfg: dict, seed: int, mtbf: float,
+                      pol: ResiliencePolicy, resume: bool, arm: str,
+                      link_only: bool = False) -> dict:
+    cluster = recovery_fleet(cfg["pods"], cfg["hosts_per_pod"])
+    total_slots = cluster.total_slots
+    subs = poisson_heavy_traffic(cfg["jobs"], total_slots, seed=seed,
+                                 elastic_frac=ELASTIC_FRAC)
+    # tenant priorities: three classes, the top one preemption-eligible
+    # (FLEET_RECOVERY sets preempt_min_prio=2)
+    subs = [(dataclasses.replace(w, priority=i % 3), t)
+            for i, (w, t) in enumerate(subs)]
+    base = SCENARIOS["FLEET_RECOVERY"]
+    scn = dataclasses.replace(
+        base, name=f"FLEET_RECOVERY_{arm}", ckpt_interval=CKPT_INTERVAL,
+        queue_cfg={**base.queue_cfg, "resume_reservation": resume},
+        faults=recovery_fault_config(mtbf, link_only=link_only),
+        resilience=pol)
+    sim = Simulator(cluster, scn, seed=seed)
+    t0 = time.perf_counter()
+    done = sim.run(subs)
+    wall = time.perf_counter() - t0
+    makespan = Simulator.makespan(done) if done else 1.0
+    useful = sum(j.job.base_runtime * j.gran.n_tasks for j in done)
+    wasted = sim.perf["rework_s"]
+    p = sim.perf
+    return {
+        "seed": seed, "arm": arm, "mtbf": mtbf, "link_only": link_only,
+        "completed": len(done),
+        "failed": len(sim.failed),
+        "unschedulable": len(sim.unschedulable),
+        "events": sim.n_events,
+        "wall_s": round(wall, 3),
+        "sim_makespan_s": round(makespan, 1),
+        "goodput": round(useful / (makespan * total_slots), 4),
+        "wasted_slot_s": round(wasted, 1),
+        "wasted_frac": round(wasted / useful, 4) if useful else 0.0,
+        "mean_response_s": round(
+            sum(j.response_time for j in done) / len(done), 1)
+        if done else None,
+        "fault_kills": p["fault_kills"], "shrinks": p["shrinks"],
+        "link_downs": p["link_downs"],
+        "link_degrades": p["link_degrades"],
+        "link_repairs": p["link_repairs"],
+        "regrows": p["regrows"],
+        # time-to-full-width: mean shrunken-running time per regrowth
+        "ttfw_s": round(p["regrow_wait_s"] / p["regrows"], 1)
+        if p["regrows"] else None,
+        "resume_holds": p["resume_holds"],
+        "resume_releases": p["resume_releases"],
+    }
+
+
+def run_recovery(csv_rows=None, smoke: bool = False, seeds: int = None):
+    cfg = RECOVERY_SMOKE if smoke else RECOVERY_FULL
+    n_seeds = seeds if seeds is not None else cfg["seeds"]
+    n_hosts = cfg["pods"] * cfg["hosts_per_pod"]
+    print("\n== Recovery-complete resilience: link faults, regrowth, "
+          "resume-claims ==")
+    print(f"   {n_hosts} hosts x 4 slots in {cfg['pods']} pods, "
+          f"{cfg['jobs']} jobs ({ELASTIC_FRAC:.0%} elastic, 3 priority "
+          f"classes), MTBF sweep {[int(m) for m in cfg['mtbfs']]}, "
+          f"{n_seeds} seed(s)")
+    results = []
+    summary: dict = {}
+    for mtbf in cfg["mtbfs"]:
+        summary[str(int(mtbf))] = {}
+        for arm, pol, resume in recovery_arms():
+            rows = [run_recovery_once(cfg, seed, mtbf, pol, resume, arm)
+                    for seed in range(n_seeds)]
+            results.extend(rows)
+            n = len(rows)
+            resp = [r["mean_response_s"] for r in rows
+                    if r["mean_response_s"] is not None]
+            ttfw = [r["ttfw_s"] for r in rows if r["ttfw_s"] is not None]
+            s = {
+                "goodput": round(sum(r["goodput"] for r in rows) / n, 4),
+                "wasted_slot_s": round(
+                    sum(r["wasted_slot_s"] for r in rows) / n, 1),
+                "mean_response_s": round(sum(resp) / len(resp), 1)
+                if resp else None,
+                "completed": round(
+                    sum(r["completed"] for r in rows) / n, 1),
+                "failed": round(sum(r["failed"] for r in rows) / n, 1),
+                "regrows": round(sum(r["regrows"] for r in rows) / n, 1),
+                "ttfw_s": round(sum(ttfw) / len(ttfw), 1)
+                if ttfw else None,
+                "resume_holds": round(
+                    sum(r["resume_holds"] for r in rows) / n, 1),
+                "link_downs": round(
+                    sum(r["link_downs"] for r in rows) / n, 1),
+            }
+            summary[str(int(mtbf))][arm] = s
+            print(f"  mtbf={int(mtbf):6d}s {arm:14s} "
+                  f"goodput={s['goodput']:.4f} "
+                  f"resp={s['mean_response_s']} "
+                  f"regrows={s['regrows']:.0f} ttfw={s['ttfw_s']} "
+                  f"holds={s['resume_holds']:.0f} "
+                  f"done={s['completed']:.0f} fail={s['failed']:.0f}")
+            if csv_rows is not None:
+                csv_rows.append((
+                    f"recovery_{arm}_mtbf{int(mtbf)}",
+                    s["mean_response_s"] or 0.0,
+                    f"goodput={s['goodput']};ttfw={s['ttfw_s']}"))
+    # link-only rows: node/domain injectors off — links never kill a
+    # placement, so every arm must finish every job
+    link_rows = []
+    for arm, pol, resume in recovery_arms():
+        r = run_recovery_once(cfg, 0, LINK_ONLY_MTBF, pol, resume, arm,
+                              link_only=True)
+        r["zero_lost"] = (r["failed"] == 0 and r["unschedulable"] == 0
+                          and r["completed"] == cfg["jobs"])
+        link_rows.append(r)
+        print(f"  link-only {arm:14s} done={r['completed']} "
+              f"fail={r['failed']} downs={r['link_downs']} "
+              f"degrades={r['link_degrades']} "
+              f"zero_lost={r['zero_lost']}")
+    # acceptance: regrow+resume beats PR-6 resilient on goodput AND mean
+    # response at >= 2 rates (>= 1 in smoke), and link-only loses nothing
+    wins = []
+    for mtbf in cfg["mtbfs"]:
+        s = summary[str(int(mtbf))]
+        a, b = s["regrow+resume"], s["resilient"]
+        wins.append({
+            "mtbf": mtbf,
+            "goodput_resilient": b["goodput"],
+            "goodput_recovery": a["goodput"],
+            "resp_resilient": b["mean_response_s"],
+            "resp_recovery": a["mean_response_s"],
+            "win": (a["goodput"] > b["goodput"]
+                    and a["mean_response_s"] is not None
+                    and b["mean_response_s"] is not None
+                    and a["mean_response_s"] < b["mean_response_s"]),
+        })
+    need = 1 if smoke else 2
+    n_wins = sum(1 for w in wins if w["win"])
+    zero_lost = all(r["zero_lost"] for r in link_rows)
+    acceptance = {"per_rate": wins, "wins": n_wins, "need": need,
+                  "link_only_zero_lost": zero_lost,
+                  "ok": n_wins >= need and zero_lost}
+    print(f"  acceptance: regrow+resume beats resilient on "
+          f"goodput+response at {n_wins}/{len(wins)} rates "
+          f"(need >= {need}), link-only zero-lost="
+          f"{zero_lost} ({'OK' if acceptance['ok'] else 'FAIL'})")
+    return {"config": {**{k: v for k, v in cfg.items() if k != 'mtbfs'},
+                       "seeds": n_seeds, "mtbfs": list(cfg["mtbfs"]),
+                       "link_only_mtbf": LINK_ONLY_MTBF},
+            "results": results, "link_only": link_rows,
+            "summary": summary, "acceptance": acceptance}
+
+
 def run(csv_rows=None, smoke: bool = False, seeds: int = None,
         out_path: str = None):
     cfg = SMOKE if smoke else FULL
@@ -195,13 +418,14 @@ def run(csv_rows=None, smoke: bool = False, seeds: int = None,
     print(f"  acceptance: resilient beats naive on goodput+waste at "
           f"{n_wins}/{len(wins)} rates (need >= {need}) "
           f"({'OK' if acceptance['ok'] else 'FAIL'})")
+    recovery = run_recovery(csv_rows, smoke=smoke, seeds=seeds)
     payload = {"smoke": smoke,
                "config": {**{k: v for k, v in cfg.items() if k != 'mtbfs'},
                           "seeds": n_seeds, "mtbfs": list(cfg["mtbfs"]),
                           "ckpt_interval": CKPT_INTERVAL,
                           "elastic_frac": ELASTIC_FRAC},
                "results": results, "summary": summary,
-               "acceptance": acceptance}
+               "acceptance": acceptance, "recovery": recovery}
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {out_path}")
@@ -212,9 +436,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sweep for CI smoke")
+    ap.add_argument("--recovery", action="store_true",
+                    help="run only the recovery-complete sweep "
+                         "(link faults x regrowth x resume-claims)")
     ap.add_argument("--seeds", type=int, default=None)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.recovery:
+        rec = run_recovery(smoke=args.smoke, seeds=args.seeds)
+        out = args.out or ("BENCH_faults_recovery_smoke.json"
+                           if args.smoke else "BENCH_faults_recovery.json")
+        with open(out, "w") as f:
+            json.dump({"smoke": args.smoke, "recovery": rec}, f, indent=2)
+        print(f"wrote {out}")
+        return
     run(smoke=args.smoke, seeds=args.seeds, out_path=args.out)
 
 

@@ -60,8 +60,12 @@ with no knowledge of why they were shaped that way:
   the pure ``job_speed`` — prediction and execution read one model —
   and the task-group binder packs NETWORK gangs under one switch via
   the per-switch dimension of ``taskgroup.ScoreIndex`` (admission stays
-  O(polylog N)).  ``Scenario.topology is None`` (default) removes the
-  layer entirely — every hook gated, flat traces byte-identical;
+  O(polylog N)).  Links are first-class fault targets: the registry is
+  symmetry-audited (every registered flow releases exactly once) and
+  ``set_link_health`` scales one link's bandwidth and ripples a refresh
+  to every gang riding it, so a degraded uplink slows exactly the
+  traffic crossing it.  ``Scenario.topology is None`` (default) removes
+  the layer entirely — every hook gated, flat traces byte-identical;
 * gang admission and the progress-based event loop live in ``simulator``;
   admission cost is O(polylog N) per event: the task-group binder's
   argmax is a live ``taskgroup.ScoreIndex`` query maintained across
@@ -85,10 +89,29 @@ with no knowledge of why they were shaped that way:
   avoidance on restart, Young/Daly-optimal per-job checkpoint intervals
   (``JobRun.ckpt_interval``, honoured by every checkpoint-quantized
   teardown), and elastic gang shrinking at checkpoint boundaries
-  (``Workload.elastic``).  The estimator's predictions inflate by the
-  expected rework under the active fault model.  ``Scenario.faults is
-  None`` (the default) removes the subsystem entirely — every hook is
-  gated on it, keeping fault-free traces byte-identical.
+  (``Workload.elastic``).  Recovery is *complete*, not just survival:
+  link-scoped faults (``FaultConfig.link_mtbf``) down or degrade
+  individual leaf/uplink/spine links through the topology layer's
+  health hook; shrunken elastic gangs stage deterministic growth claims
+  and re-expand to full width at their next checkpoint boundary
+  (``ResiliencePolicy.regrow`` — claims are staged at most
+  ``regrow_lead`` seconds ahead of the boundary so reserved capacity
+  never idles for a whole checkpoint interval, re-quantized if speeds
+  drift, planned best-fit with an own-node preference so holds don't
+  fragment whole-host capacity); and preemption victims get
+  resume-reservations (``queue_cfg["resume_reservation"]``) — the
+  discipline withholds the victim's freed slots in the reserved-
+  capacity overlay until it restarts, exempting only the victim itself.
+  The two overlay writers coordinate through
+  ``QueueDiscipline.claimed_slots()``: the regrow planner treats
+  resume-claimed capacity as occupied, so a growth hold can never lock
+  a victim out of its own reservation.  All retry/regrow timers carry
+  per-job sequence tokens; every teardown path bumps the token, so a
+  stale event can never resurrect a cancelled recovery.  The
+  estimator's predictions inflate by the expected rework under the
+  active fault model.  ``Scenario.faults is None`` (the default)
+  removes the subsystem entirely — every hook is gated on it, keeping
+  fault-free traces byte-identical.
 
 The stack composes freely — any queue discipline over any placement
 policy (``Scenario.queue`` x ``Scenario.placement``), dispatched without

@@ -96,7 +96,11 @@ def job_speed(p, affinity: bool, prof: Profile, tpw: int, n_nodes: int,
     .net_factors`` / ``.queued_net``): the multi-worker term becomes
     ``1 + (net_multiworker - 1) * intra`` and the internode term is
     multiplied by the gang's bottleneck-link stress (hop penalty x
-    saturation over its placement).  ``None`` (the default — every
+    saturation over its placement).  Link-scoped faults
+    (``FaultConfig.link_mtbf``) arrive through this same input: an
+    unhealthy link scales its effective bandwidth inside ``stress``, so
+    a dead uplink slows every gang crossing it without any new term
+    here — the placed prediction and execution keep reading one model.  ``None`` (the default — every
     topology-off scenario) takes the original flat branches verbatim;
     a degenerate ``(1.0, 1.0)`` pair reproduces them float-for-float
     (``x - 1.0`` and ``+ 1.0`` round-trip exactly for ``x >= 1``, and

@@ -60,6 +60,29 @@ happens to the gangs a fault kills:
   the lost workers' tasks at proportionally reduced speed — instead of
   losing the whole gang's progress.
 
+**Recovery** (the degrade -> recover loop, both layers):
+
+* *link-scoped faults* — with ``FaultConfig.link_mtbf`` set (and a
+  topology configured) the injector also draws per-link down/degraded
+  events against ``core.topology``'s leaf/uplink/spine tree.  An
+  unhealthy link multiplies the bottleneck-link stress already threaded
+  through ``estimates.job_speed`` — it slows every gang crossing it and
+  never kills a placement; a dead spine falls back to the configured
+  residual floor (``link_down_floor``, the surviving parallel capacity).
+  Seeded repairs restore bandwidth and re-price co-users through the
+  same dirty-set the node lifecycle uses.
+* *elastic regrowth* — with ``ResiliencePolicy.regrow`` a shrunken
+  elastic gang registers a growth claim: when ``_on_recover`` (or a
+  link repair) returns capacity, a deterministic plan for its lost
+  workers is staged in the reserved-capacity overlay (``merge_overlay``
+  withholds the claimed slots from every other gang) and the gang
+  re-expands to full width at its next checkpoint boundary — the exact
+  inverse of :meth:`FaultEngine._shrink`, width factor restored.
+* *resume-reservations* live in the queue discipline (see
+  ``queues.PriorityQueue``) but ride the same overlay contract: the
+  placement policies compose ``faults.merge_overlay`` and
+  ``discipline.merge_overlay`` into one reserve map.
+
 With ``Scenario.faults`` left ``None`` the subsystem is entirely absent
 (``make_faults`` returns ``None`` and every engine hook is gated on it),
 so all pre-fault golden trace hashes are byte-identical by construction.
@@ -113,6 +136,16 @@ class FaultConfig:
     domain_mtbf: float = 0.0           # correlated pod-level faults (0=off)
     domain_repair: float = 900.0
     horizon: Optional[float] = None    # stop injecting after this sim time
+    # ---- link-scoped faults (None = off; needs Scenario.topology) ----
+    # per-link mean time between faults; each fault takes the link down
+    # (residual ``link_down_floor`` bandwidth — surviving parallel
+    # capacity) with probability ``link_p_down``, else degrades it to
+    # ``link_degrade_factor``; repairs are jittered like node repairs
+    link_mtbf: Optional[float] = None
+    link_p_down: float = 0.35
+    link_degrade_factor: float = 0.4
+    link_down_floor: float = 0.05
+    link_repair: float = 900.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +161,17 @@ class ResiliencePolicy:
     drain: bool = True                 # honour cordon + drain grace
     drain_grace: float = 180.0
     elastic_shrink: bool = True        # shrink elastic gangs on part-fail
+    # re-expand shrunken elastic gangs to full width (at a checkpoint
+    # boundary) once recovery returns capacity — off by default so every
+    # pre-regrowth golden trace hash stays byte-identical
+    regrow: bool = False
+    # max seconds a growth claim may sit staged ahead of its checkpoint
+    # boundary.  The claim's hold idles the reserved slots until the
+    # regrow fires, so staging the moment capacity returns can park
+    # free capacity for a whole checkpoint interval; the lead window
+    # caps that idle time (the planner re-checks when the boundary is
+    # near).  ``None`` = stage immediately whenever feasible.
+    regrow_lead: Optional[float] = 90.0
 
     @staticmethod
     def naive() -> "ResiliencePolicy":
@@ -158,6 +202,10 @@ _RECOVER = "recover"
 _DRAIN = "drain-kill"
 _DEGRADE_END = "degrade-end"
 _RETRY = "retry"
+_LINK = "link-fault"
+_LINK_UP = "link-repair"
+_REGROW = "regrow"
+_RESTAGE = "regrow_stage"
 
 # lifecycle states (absent from the map = "healthy")
 HEALTHY = "healthy"
@@ -186,6 +234,22 @@ class FaultEngine:
         self._orig_slots: Dict[str, int] = {}  # down/dead nodes' capacity
         self._in_backoff = 0                   # pending retry releases
         self._cap_events = 0                   # pending recover/drain evts
+        # link lifecycle: link key -> "down" | "degraded" (absent=healthy)
+        self.link_state: Dict[tuple, str] = {}
+        # regrowth: shrunken elastic gangs awaiting capacity (insertion-
+        # ordered), staged claims' per-worker plans + overlay holds, and
+        # the live _REGROW event tokens (seq) — a mismatched token is a
+        # cancelled event (the gang stopped or re-shrank in between)
+        self._shrunken: Dict[object, None] = {}
+        self._regrow_plan: Dict[object, list] = {}   # jr -> [(worker, node)]
+        self._regrow_hold: Dict[object, Dict[str, int]] = {}
+        self._regrow_live: Dict[object, int] = {}
+        # live _RESTAGE tokens: jr -> seq of a deferred staging re-check
+        # (the boundary was further out than ``pol.regrow_lead``)
+        self._restage_live: Dict[object, int] = {}
+        # live _RETRY tokens: jr -> seq of its pending backoff release
+        # (cancellation = drop the entry; the heap event no-ops on pop)
+        self._retry_live: Dict[object, int] = {}
         # stall guard: quiesce injection after this many fault events in a
         # row fired while nothing was running (bounds every run even when
         # a never-fitting queue would otherwise see faults forever)
@@ -209,18 +273,26 @@ class FaultEngine:
         if cfg.domain_mtbf > 0:
             for pod in sorted({n.pod for n in sim.cluster.nodes}):
                 self._schedule(self._gap(cfg.domain_mtbf), _DOMAIN, pod)
+        if cfg.link_mtbf is not None and cfg.link_mtbf > 0 \
+                and sim.topo is not None:
+            for key in sim.topo.faultable_links():
+                self._schedule(self._gap(cfg.link_mtbf), _LINK, key)
 
     # ---------------- event heap ------------------------------------------
-    def _schedule(self, t: float, kind: str, payload):
-        if self.cfg.horizon is not None and kind in (_FAULT, _DOMAIN) \
+    def _schedule(self, t: float, kind: str, payload) -> int:
+        if self.cfg.horizon is not None and kind in (_FAULT, _DOMAIN,
+                                                     _LINK) \
                 and t > self.cfg.horizon:
-            return
+            return 0
         self._eseq += 1
         heapq.heappush(self.events, (t, self._eseq, kind, payload))
         if kind in (_RECOVER, _DRAIN):
             self._cap_events += 1
         elif kind == _RETRY:
-            self._in_backoff += 1
+            if payload not in self._retry_live:
+                self._in_backoff += 1
+            self._retry_live[payload] = self._eseq
+        return self._eseq
 
     def _gap(self, mean: float) -> float:
         if self.cfg.dist == "weibull":
@@ -270,11 +342,9 @@ class FaultEngine:
         sim = self.sim
         ev = self.events
         while ev and ev[0][0] <= sim.now + 1e-12:
-            _, _, kind, payload = heapq.heappop(ev)
+            _, seq, kind, payload = heapq.heappop(ev)
             if kind == _RECOVER or kind == _DRAIN:
                 self._cap_events -= 1
-            elif kind == _RETRY:
-                self._in_backoff -= 1
             if kind == _FAULT:
                 self._on_fault(payload, dirty_nodes)
             elif kind == _DOMAIN:
@@ -286,7 +356,26 @@ class FaultEngine:
             elif kind == _DEGRADE_END:
                 self._on_degrade_end(payload, dirty_nodes)
             elif kind == _RETRY:
-                self._on_retry(payload)
+                # token check: a cancelled retry (its job reached a
+                # terminal state) already settled the backoff counter
+                if self._retry_live.get(payload) == seq:
+                    del self._retry_live[payload]
+                    self._in_backoff -= 1
+                    self._on_retry(payload)
+            elif kind == _LINK:
+                self._on_link_fault(payload, dirty_nodes)
+            elif kind == _LINK_UP:
+                self._on_link_repair(payload, dirty_nodes)
+            elif kind == _REGROW:
+                self._on_regrow(payload, seq, dirty_nodes)
+            elif kind == _RESTAGE:
+                # token check mirrors _RETRY: a stale event (the gang
+                # regrew, re-shrank, or reached a terminal state since
+                # scheduling) is a no-op
+                if self._restage_live.get(payload) == seq:
+                    del self._restage_live[payload]
+                    if self.pol.regrow and self._shrunken:
+                        self._check_regrow(dirty_nodes)
 
     def _track_stall(self):
         if not self.sim.running and self.sim.queue:
@@ -382,6 +471,10 @@ class FaultEngine:
         sim.policy.invalidate_reservation()
         if dirty is not None:
             dirty.add(name)
+        if self.pol.regrow:
+            # survivors of an elastic shrink may be able to stage their
+            # growth claim against capacity that is free *right now*
+            self._check_regrow(dirty)
 
     def _on_recover(self, name: str, dirty):
         sim = self.sim
@@ -393,6 +486,8 @@ class FaultEngine:
         sim.policy.invalidate_reservation()
         if dirty is not None:
             dirty.add(name)
+        if self.pol.regrow:
+            self._check_regrow(dirty)
 
     def _degrade(self, name: str, dirty):
         sim = self.sim
@@ -433,6 +528,48 @@ class FaultEngine:
             return                              # superseded by an outage
         self.sim.perf["drains"] += 1
         self._take_down(name, self._repair(self.cfg.repair_time), dirty)
+
+    # ---------------- link lifecycle ---------------------------------------
+    def _on_link_fault(self, key: tuple, dirty):
+        """A fabric link breaks: down (residual-floor bandwidth — the
+        surviving parallel capacity of a LAG/spine plane) or degraded.
+        Never kills a placement; every gang crossing the link slows via
+        the bottleneck-link stress in the speed model."""
+        if self._quiesced:
+            return
+        self._track_stall()
+        sim = self.sim
+        if self.link_state.get(key) is not None:
+            # already unhealthy: repair pending, just draw the next fault
+            self._schedule(sim.now + self._gap(self.cfg.link_mtbf),
+                           _LINK, key)
+            return
+        if self.rng.random() < self.cfg.link_p_down:
+            state, factor = "down", self.cfg.link_down_floor
+            sim.perf["link_downs"] += 1
+        else:
+            state, factor = "degraded", self.cfg.link_degrade_factor
+            sim.perf["link_degrades"] += 1
+        self.link_state[key] = state
+        sim.topo.set_link_health(key, max(factor, 1e-6), dirty)
+        # every finish prediction through this link moved: cached
+        # reservation projections are stale (same class as _degrade)
+        sim.policy.invalidate_reservation()
+        self._schedule(sim.now + self._repair(self.cfg.link_repair),
+                       _LINK_UP, key)
+        self._schedule(sim.now + self._gap(self.cfg.link_mtbf), _LINK, key)
+
+    def _on_link_repair(self, key: tuple, dirty):
+        if self.link_state.pop(key, None) is None:
+            return
+        sim = self.sim
+        sim.perf["link_repairs"] += 1
+        sim.topo.set_link_health(key, None, dirty)
+        sim.policy.invalidate_reservation()
+        if self.pol.regrow:
+            # restored bandwidth is returned capacity for a shrunken
+            # gang whose regrow plan was bandwidth-priced out earlier
+            self._check_regrow(dirty)
 
     # ---------------- resilience: kill / shrink / retry --------------------
     def _kill_or_shrink(self, jr, node_name: str, dirty,
@@ -534,6 +671,18 @@ class FaultEngine:
         jr.shrinks += 1
         sim.perf["shrinks"] += 1
         sim.perf["rework_s"] += rework * jr.gran.n_tasks
+        if self.pol.regrow:
+            # remember the lost workers for the inverse operation and
+            # register the growth claim; a claim already staged against
+            # the pre-shrink width is stale — void it (the gang stays in
+            # the wait-set and re-stages at the next recovery event)
+            jr._lost_workers = (jr._lost_workers or []) + lost
+            if jr._shrunk_t is None:
+                jr._shrunk_t = sim.now
+            self._shrunken[jr] = None
+            if self._regrow_live.pop(jr, None) is not None:
+                self._release_hold(jr)
+            self._restage_live.pop(jr, None)
         jr._ver += 1                           # heap entry is stale
         jr._pushed = False
         sim._cap_ver += 1
@@ -541,6 +690,230 @@ class FaultEngine:
         if dirty is not None:
             dirty.update(jr.nodes_used)
             dirty.add(node_name)
+
+    # ---------------- elastic regrowth -------------------------------------
+    def _check_regrow(self, dirty):
+        """Capacity returned (node recovery, link repair, any teardown):
+        stage a growth claim for every waiting shrunken gang that now
+        fits.  The claim is a deterministic plan for the gang's lost
+        workers (best-fit against free slots net of cordons and already-
+        staged holds, lowest node index on ties — identical across both
+        event loops) whose slots ``merge_overlay`` withholds from every
+        other gang until the regrow fires at the next checkpoint
+        boundary."""
+        sim = self.sim
+        for jr in list(self._shrunken):
+            if jr in self._regrow_live or jr in self._restage_live:
+                continue          # claim staged / staging deliberately
+                #                   deferred until the boundary is near
+            lost = jr._lost_workers
+            if not lost or jr not in sim.running:
+                self._shrunken.pop(jr, None)
+                continue
+            sim._sync(jr)
+            if jr.speed <= 0:
+                continue
+            ck = jr.ckpt_interval if jr.ckpt_interval is not None \
+                else sim.sc.ckpt_interval
+            done = jr.job.base_runtime - jr.remaining
+            # next checkpoint boundary (ck <= 0: regrow immediately)
+            nxt = (math.floor(done / ck) + 1.0) * ck if ck > 0 else done
+            if nxt >= jr.job.base_runtime:
+                # the gang finishes (at reduced width) before its next
+                # checkpoint: regrowing would only buy rework
+                self._shrunken.pop(jr, None)
+                continue
+            lead = self.pol.regrow_lead
+            wait = (nxt - done) / jr.speed
+            # the slack keeps the deferral from chasing float rounding:
+            # after one deferral the gang re-checks with wait ~= lead,
+            # and a sub-ulp excess would re-schedule at the *same*
+            # timestamp forever.  Within slack of the lead, just stage.
+            if lead is not None and \
+                    wait - lead > 1e-9 * (abs(sim.now) + lead + 1.0):
+                # the hold would idle its reserved slots for the whole
+                # wait: defer staging until the boundary is ``lead``
+                # away and re-plan against the capacity live then
+                self._restage_live[jr] = self._schedule(
+                    sim.now + wait - lead, _RESTAGE, jr)
+                continue
+            plan = self._plan_regrow(jr, lost)
+            if plan is None:
+                continue                       # still does not fit
+            hold: Dict[str, int] = {}
+            for w, name in plan:
+                hold[name] = hold.get(name, 0) + w.n_tasks
+            self._regrow_plan[jr] = plan
+            self._regrow_hold[jr] = hold
+            t = sim.now + (nxt - done) / jr.speed
+            self._regrow_live[jr] = self._schedule(t, _REGROW, jr)
+
+    def _plan_regrow(self, jr, lost) -> Optional[list]:
+        """Deterministic placement plan ``[(worker, node name)]`` for the
+        lost workers against intrinsic free capacity minus lifecycle
+        exclusions and other staged holds, or ``None`` if it does not
+        fit.  Widest worker first; per worker the node choice is
+        *best-fit* (smallest sufficient free, lowest node index on
+        ties), preferring nodes the gang already occupies.  Best-fit
+        matters because the plan becomes a reserved-capacity hold: a
+        worst-fit hold parks on the emptiest hosts and fragments the
+        fleet's whole-node capacity, forcing concurrently admitted
+        gangs to split across switches — the hold should consume
+        existing fragments instead.  Plain greedy, stable across both
+        loops (no RNG, no dict-order dependence)."""
+        cluster = self.sim.cluster
+        held: Dict[str, int] = {}
+        for h in self._regrow_hold.values():
+            for nm, s in h.items():
+                held[nm] = held.get(nm, 0) + s
+        # the queue discipline's own reservations (resume claims) are
+        # spoken-for capacity too — staking a growth hold on a preempted
+        # victim's freed slots would lock the victim out of them
+        for nm, s in self.sim.discipline.claimed_slots().items():
+            held[nm] = held.get(nm, 0) + s
+        mine = set(jr.nodes_used) if jr.nodes_used else set()
+        avail: List[list] = []
+        for n in cluster.nodes:
+            if self.state.get(n.name) in (DOWN, DEAD, CORDONED):
+                continue
+            f = n.free - held.get(n.name, 0)
+            if f > 0:
+                avail.append([f, n.name, n.name in mine])
+        plan = []
+        for w in sorted(lost, key=lambda w: -w.n_tasks):
+            best = None
+            for entry in avail:
+                if entry[0] < w.n_tasks:
+                    continue
+                if best is None or (entry[2], -entry[0]) \
+                        > (best[2], -best[0]):
+                    best = entry
+            if best is None:
+                return None
+            best[0] -= w.n_tasks
+            plan.append((w, best[1]))
+        return plan
+
+    def _release_hold(self, jr):
+        self._regrow_plan.pop(jr, None)
+        self._regrow_hold.pop(jr, None)
+
+    def _on_regrow(self, jr, seq: int, dirty):
+        """Checkpoint boundary reached with a staged claim: re-expand the
+        gang to full width — the exact inverse of :meth:`_shrink` (bind
+        the lost workers per the staged plan, re-pin domains, re-register
+        link traffic, restore the width factor, quantize rework)."""
+        if self._regrow_live.get(jr) != seq:
+            return          # stale: the gang stopped or re-shrank; its
+            #                 hold was released at cancellation time
+        del self._regrow_live[jr]
+        sim = self.sim
+        hold = self._regrow_hold[jr]
+        for name, slots in hold.items():
+            node = sim.cluster.node(name)
+            if node.free < slots or \
+                    self.state.get(name) in (DOWN, DEAD, CORDONED):
+                # a planned node went away since staging: void the
+                # claim; the gang stays in the wait-set and re-stages
+                # at the next recovery event
+                self._release_hold(jr)
+                return
+        sim._sync(jr)
+        ck = jr.ckpt_interval if jr.ckpt_interval is not None \
+            else sim.sc.ckpt_interval
+        if ck > 0:
+            # the staged fire time assumed the staging-time speed; if the
+            # gang's speed moved since, "now" is no longer the checkpoint
+            # boundary and firing here would charge up to a full interval
+            # of rework.  Re-aim at the *current* next boundary (keeping
+            # the staged hold) until the fire lands on it — regrowing at
+            # a boundary is free, the exact inverse of ``_shrink``.
+            done = jr.job.base_runtime - jr.remaining
+            drift = done - math.floor(done / ck + 1e-9) * ck
+            if drift > 1e-6 * ck:
+                nxt = (math.floor(done / ck) + 1.0) * ck
+                if nxt >= jr.job.base_runtime or jr.speed <= 0:
+                    # finishes (at reduced width) before the boundary
+                    self._release_hold(jr)
+                    self._shrunken.pop(jr, None)
+                    return
+                self._regrow_live[jr] = self._schedule(
+                    sim.now + (nxt - done) / jr.speed, _REGROW, jr)
+                return
+        plan = self._regrow_plan.pop(jr)
+        del self._regrow_hold[jr]
+        topo = sim.topo
+        if topo is not None:
+            # link footprint is placement-derived: release the shrunken
+            # registration, re-register from the full gang below (the
+            # same symmetry contract _shrink honours)
+            topo.on_stop(jr, dirty)
+        w_mem = MEM_WEIGHT.get(jr.job.profile, 0.0)
+        new_workers = []
+        for w, name in plan:
+            node = sim.cluster.node(name)
+            w.node = name
+            node.used += w.n_tasks
+            sim.bound.add(w)
+            sim._node_jobs.setdefault(name, set()).add(jr)
+            if w_mem:
+                sim._mem_load_sum += w_mem * w.n_tasks
+                sim._mem_load_live[name] = \
+                    sim._mem_load_live.get(name, 0.0) + w_mem * w.n_tasks
+            jr.workers.append(w)
+            new_workers.append(w)
+        sim._pin_domains(jr, new_workers)
+        jr._lost_workers = None
+        jr._nodes = None                       # recompute from full gang
+        if topo is not None:
+            topo.on_start(jr, dirty)
+        jr._width_factor = 1.0                 # full width restored
+        done_work = jr.job.base_runtime - jr.remaining
+        saved = sim._ckpt_saved(done_work, jr)
+        rework = done_work - saved
+        jr.remaining = jr.job.base_runtime - saved
+        jr.wasted_work += rework
+        jr.regrows += 1
+        self._shrunken.pop(jr, None)
+        sim.perf["regrows"] += 1
+        sim.perf["rework_s"] += rework * jr.gran.n_tasks
+        if jr._shrunk_t is not None:
+            sim.perf["regrow_wait_s"] += sim.now - jr._shrunk_t
+            jr._shrunk_t = None
+        jr._ver += 1                           # heap entry is stale
+        jr._pushed = False
+        sim._cap_ver += 1
+        sim.policy.invalidate_reservation()
+        if dirty is not None:
+            dirty.update(jr.nodes_used)
+
+    # ---------------- terminal-state event hygiene -------------------------
+    def cancel_job_events(self, jr):
+        """Drop the job's pending retry/regrow timers and release its
+        growth claim: a terminal state (finished / failed / preempted-
+        requeued / fault-killed) must not leave dead events holding the
+        loop alive through ``work_pending`` or dead slots withheld in
+        the overlay."""
+        seq = self._retry_live.pop(jr, None)
+        if seq is not None:
+            self._in_backoff -= 1
+        self._regrow_live.pop(jr, None)
+        self._restage_live.pop(jr, None)
+        self._release_hold(jr)
+        self._shrunken.pop(jr, None)
+        # a full teardown means the next attempt is a full gang: stale
+        # lost-worker records must not resurrect into a later shrink
+        jr._lost_workers = None
+        jr._shrunk_t = None
+
+    def on_job_stop(self, jr):
+        """Teardown hook (``Simulator._on_stop``, gated on the engine's
+        presence): cancel the stopping job's pending timers, then let
+        *other* waiting shrunken gangs claim the capacity this teardown
+        just freed."""
+        self.cancel_job_events(jr)
+        if self.pol.regrow and self._shrunken:
+            self._check_regrow(None)
 
     # ---------------- hooks the simulator/policies/estimator read ----------
     def on_submit(self, jr):
@@ -569,7 +942,12 @@ class FaultEngine:
         nodes are fully withheld, and so are the gang's blacklisted
         nodes — unless the blacklist would leave no node able to host
         the gang's widest worker (avoidance must degrade, not deadlock).
-        Returns the merged overlay (or the input unchanged)."""
+        Staged regrow claims withhold exactly their planned slots (no
+        lift rule needed: a claim's gang is running, so the loop stays
+        alive until the regrow fires and releases the hold — claims
+        delay placements by at most a checkpoint interval, never
+        deadlock them).  Returns the merged overlay (or the input
+        unchanged)."""
         sim = self.sim
         cluster = sim.cluster
         excl: Dict[str, int] = {}
@@ -595,13 +973,19 @@ class FaultEngine:
                     f = cluster.node(name).free
                     if f > 0:
                         excl[name] = f
-        if not excl:
+        holds = self._regrow_hold
+        if not excl and not holds:
             return reserve
         merged = dict(reserve) if reserve else {}
         for name, f in excl.items():
             if merged.get(name, 0) < f:
                 merged[name] = f
-        return merged
+        # regrow claims stack additively on whatever else is reserved on
+        # the node (they protect specific slots, not the whole node)
+        for hold in holds.values():
+            for name, s in hold.items():
+                merged[name] = merged.get(name, 0) + s
+        return merged if merged else reserve
 
     def cordoned_free(self) -> int:
         """Free slots currently behind a cordon — capacity the EASY

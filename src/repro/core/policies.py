@@ -212,6 +212,8 @@ class DefaultPolicy(PlacementPolicy):
         cluster = sim.cluster
         if sim.faults is not None:    # cordoned/blacklisted nodes withheld
             reserve = sim.faults.merge_overlay(jr, reserve)
+        # discipline-owned exclusions (resume-reservations; base: no-op)
+        reserve = sim.discipline.merge_overlay(jr, reserve)
         keyed = sim.sc.job_ids == "uid"
         workers = make_workers(jr.job, jr.gran, uid=jr.uid)
         # a reserved-capacity overlay seeds the staged map: for this
@@ -332,6 +334,8 @@ class TaskGroupPolicy(PlacementPolicy):
         sim.perf["place_attempts"] += 1
         if sim.faults is not None:    # cordoned/blacklisted nodes withheld
             reserve = sim.faults.merge_overlay(jr, reserve)
+        # discipline-owned exclusions (resume-reservations; base: no-op)
+        reserve = sim.discipline.merge_overlay(jr, reserve)
         if not use_index:            # legacy: rebuild the gang every attempt
             workers = make_workers(jr.job, jr.gran, uid=jr.uid)
             return TG.schedule_job(sim.cluster, workers, jr.gran.n_groups,

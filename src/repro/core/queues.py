@@ -121,6 +121,30 @@ class QueueDiscipline:
     def on_stop(self, jr):
         pass
 
+    # -- reserved-capacity overlay ------------------------------------------
+    def merge_overlay(self, jr,
+                      reserve: Optional[Dict[str, int]]
+                      ) -> Optional[Dict[str, int]]:
+        """Compose the discipline's own placement exclusions into the
+        reserved-capacity overlay the binders honour — the same contract
+        ``faults.FaultEngine.merge_overlay`` implements for cordons and
+        blacklists.  Base/FIFO: none (returns the input unchanged, so
+        every pre-existing trace is untouched).  ``PriorityQueue`` uses
+        it for resume-reservations (a preemption victim's freed slots)."""
+        return reserve
+
+    def claimed_slots(self) -> Dict[str, int]:
+        """Slots the discipline is holding back from general admission
+        (``{node: slots}``, additive).  The fault engine's regrow planner
+        subtracts these before staging a growth hold, so the two
+        reservation subsystems never stake the same capacity — without
+        this, a preemption teardown could stage a regrow hold on the
+        victim's freed slots, exactly the capacity a resume claim is
+        protecting, and the victim (exempt from resume claims but not
+        from growth holds) would be locked out of its own reservation.
+        Base/FIFO: nothing claimed."""
+        return {}
+
     # -- preemption --------------------------------------------------------
     def maybe_preempt(self, dirty_nodes: Optional[set],
                       use_index: bool = True,
@@ -147,6 +171,10 @@ class QueueDiscipline:
         wasted = done_work - saved
         jr.remaining = jr.job.base_runtime - saved
         jr.workers = []
+        if jr._width_factor != 1.0:
+            # a shrunken elastic victim restarts as a *full* gang — the
+            # surviving-width speed penalty must not follow it
+            jr._width_factor = 1.0
         jr.preemptions += 1
         jr.wasted_work += wasted
         sim.perf["preemptions"] += 1
@@ -176,7 +204,12 @@ class PriorityQueue(QueueDiscipline):
     defaults to on exactly when the scenario runs the contention
     estimator — the application-layer signal that placement-shaped
     predictions are wanted — so ``estimator="remaining"`` scenarios
-    keep the PR-4 cheapest-prefix behaviour bit-for-bit).
+    keep the PR-4 cheapest-prefix behaviour bit-for-bit), and
+    ``resume_reservation`` (default False: a preemption victim's freed
+    slots are withheld in the reserved-capacity overlay — first for the
+    preempting head, then, once the head starts, earmarked for the
+    victim's requeue — so backfill cannot starve the victim out of its
+    own capacity; see :meth:`merge_overlay`).
     """
 
     name = "priority"
@@ -192,6 +225,15 @@ class PriorityQueue(QueueDiscipline):
         self.placement_aware = bool(
             self.cfg.get("placement_aware",
                          sim.sc.estimator == "contention"))
+        self.resume_reservation = bool(
+            self.cfg.get("resume_reservation", False))
+        # live claims: {"head", "victim", "nodes", "armed"} — unarmed
+        # protects the freed slots for the head (victim teardown ->
+        # head start), armed earmarks them for the victim's requeue
+        # (head start -> victim restart).  Both transitions happen in
+        # :meth:`on_start`; with the flag off the list stays empty and
+        # every hook below is a no-op.
+        self._resume: list = []
 
     def effective_priority(self, jr, now: float) -> float:
         """Class plus queue age (since *last enqueue* — preemption resets
@@ -332,10 +374,83 @@ class PriorityQueue(QueueDiscipline):
         if not satisfied:
             return False
         for jr in plan:
+            freed_nodes = dict(jr.nodes_used) if self.resume_reservation \
+                else None
             self._preempt_gang(jr, dirty_nodes)
+            if freed_nodes:
+                # resume-reservation: remember exactly which slots the
+                # kill freed; merge_overlay withholds them from everyone
+                # but the head until it starts, then from everyone but
+                # the victim until *it* restarts
+                self._resume.append({"head": head, "victim": jr,
+                                     "nodes": freed_nodes,
+                                     "armed": False})
+                sim.perf["resume_holds"] += 1
             if killed is not None:
                 killed.add(jr)
         return True
+
+    def on_start(self, jr):
+        if not self._resume:
+            return
+        keep = []
+        for c in self._resume:
+            if c["victim"] is jr:
+                # the victim restarted: the claim did its job
+                self.sim.perf["resume_releases"] += 1
+                continue
+            if c["head"] is jr:
+                c["armed"] = True     # head is placed: earmark for victim
+            keep.append(c)
+        self._resume[:] = keep
+
+    def merge_overlay(self, jr,
+                      reserve: Optional[Dict[str, int]]
+                      ) -> Optional[Dict[str, int]]:
+        claims = self._resume
+        if not claims:
+            return reserve
+        # lift rule: claims only hold while something is *running* — a
+        # running gang's eventual finish is the natural release path
+        # (the head starts, the victim restarts on its claimed slots),
+        # so any blockage is temporary by construction.  With nothing
+        # running there is no such path: withheld slots could turn a
+        # placeable queue into the deadlock break's unschedulable sweep,
+        # so the claims go inert and placement degrades into ordinary
+        # priority-order contention.
+        if not self.sim.running:
+            return reserve
+        # a protected party (an unarmed claim's head, an armed claim's
+        # victim) sees NO claim exclusions at all: gang workers scatter
+        # across hosts, so two victims' claims overlap and fragment each
+        # other — per-claim exemption would let them block each other
+        # out of the very capacity reserved for them.  The reservation
+        # protects the preempted *class* against backfill; within it the
+        # discipline order decides.
+        for c in claims:
+            if jr is (c["victim"] if c["armed"] else c["head"]):
+                return reserve
+        excl: Dict[str, int] = {}
+        for c in claims:
+            for name, s in c["nodes"].items():
+                excl[name] = excl.get(name, 0) + s
+        merged = dict(reserve) if reserve else {}
+        for name, s in excl.items():
+            merged[name] = merged.get(name, 0) + s
+        return merged
+
+    def claimed_slots(self) -> Dict[str, int]:
+        """The union of live resume claims, under the same inertness
+        rule as :meth:`merge_overlay` (claims only bind while something
+        runs) — what the regrow planner must keep its hands off."""
+        claims = self._resume
+        if not claims or not self.sim.running:
+            return {}
+        out: Dict[str, int] = {}
+        for c in claims:
+            for name, s in c["nodes"].items():
+                out[name] = out.get(name, 0) + s
+        return out
 
 
 class FairShareQueue(QueueDiscipline):

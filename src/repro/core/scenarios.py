@@ -131,6 +131,29 @@ SCENARIOS: Dict[str, Scenario] = {
     "FLEET_TOPO": Scenario("FLEET_TOPO", affinity=True, policy=None,
                            taskgroup=True, job_ids="uid",
                            force_split=True, topology=TopologyConfig()),
+    # ---- recovery-complete resilience (faults + topology + queues) -------
+    # the degrade -> recover composite: link-scoped faults against the
+    # switch/spine tree (a dead uplink slows every gang crossing it,
+    # never kills), elastic regrowth (shrunken gangs re-expand to full
+    # width at a checkpoint boundary once capacity returns, via a
+    # reserved-capacity growth claim) and resume-reservations (a
+    # preemption victim's freed slots are earmarked for its requeue).
+    # Every scenario above leaves all three flags off — link_mtbf=None,
+    # regrow=False, no resume_reservation — traces byte-identical
+    # ``backfill`` (skip-ahead) is on: resume-reservations only matter
+    # when lower-priority gangs can overtake a blocked head at all —
+    # the claims deny exactly those skip-aheads on the victims' slots
+    "FLEET_RECOVERY": Scenario("FLEET_RECOVERY", affinity=True,
+                               policy=None, taskgroup=True,
+                               job_ids="uid", force_split=True,
+                               backfill=True, queue="priority",
+                               queue_cfg={"preempt": True,
+                                          "preempt_min_prio": 2,
+                                          "preempt_delay": 60.0,
+                                          "resume_reservation": True},
+                               topology=TopologyConfig(),
+                               faults=FaultConfig(link_mtbf=60_000.0),
+                               resilience=ResiliencePolicy(regrow=True)),
 }
 
 

@@ -164,6 +164,7 @@ class JobRun:                            # per-node running-jobs index
     wasted_work: float = 0.0             # work-seconds lost to preemptions
     retries: int = 0                     # times killed by a node fault
     shrinks: int = 0                     # elastic partial-failure shrinks
+    regrows: int = 0                     # elastic re-expansions to full width
     # per-job checkpoint interval (Young/Daly stamp from the fault
     # engine); None = the scenario-wide ``Scenario.ckpt_interval``
     ckpt_interval: Optional[float] = None
@@ -189,6 +190,12 @@ class JobRun:                            # per-node running-jobs index
     # topology-layer registration record: the (link key, tasks) list this
     # gang holds in ``NetworkTopology.traffic`` (None = not registered)
     _net_links: Optional[list] = dataclasses.field(default=None, repr=False)
+    # elastic-regrowth state (fault engine, ``ResiliencePolicy.regrow``):
+    # the WorkerSpecs lost to shrinks (restored by ``_on_regrow``) and the
+    # first-shrink timestamp (time-to-full-width accounting)
+    _lost_workers: Optional[list] = dataclasses.field(default=None,
+                                                      repr=False)
+    _shrunk_t: Optional[float] = dataclasses.field(default=None, repr=False)
 
     @property
     def nodes_used(self) -> Dict[str, int]:
@@ -260,6 +267,12 @@ class Simulator:
             "node_faults": 0, "domain_faults": 0, "degrades": 0,
             "cordons": 0, "drains": 0, "fault_kills": 0, "retries": 0,
             "fault_failed": 0, "shrinks": 0, "rework_s": 0.0,
+            # recovery counters: link-scoped fault lifecycle, elastic
+            # regrowth (count + cumulative shrink->full-width wait), and
+            # the priority queue's resume-reservation claims
+            "link_downs": 0, "link_degrades": 0, "link_repairs": 0,
+            "regrows": 0, "regrow_wait_s": 0.0,
+            "resume_holds": 0, "resume_releases": 0,
             # topology-layer counters (all zero with the layer off):
             # link-traffic registrations/releases, gangs placed through
             # the switch-packed argmax, and the registry's wall-time
@@ -403,6 +416,11 @@ class Simulator:
         jr._pushed = False
         jr._nodes = None
         self.discipline.on_stop(jr)
+        if self.faults is not None:
+            # terminal-state hygiene: cancel pending retry/regrow timers
+            # and release growth claims (every teardown routes through
+            # here — finish, kill, preempt, node-fail, drain)
+            self.faults.on_job_stop(jr)
         if dirty_nodes is not None:
             dirty_nodes.update(nodes)
 
@@ -413,11 +431,13 @@ class Simulator:
         jr._synced_t = self.now
 
     # ---------------- NUMA pinning (Kubelet layer) -------------------------
-    def _pin_domains(self, jr: JobRun):
+    def _pin_domains(self, jr: JobRun, workers: Optional[list] = None):
         """CPU-manager static policy + best-effort topology manager: pin each
         worker's tasks to the emptiest socket(s) of its node; without
-        affinity tasks float (recorded as an even spread)."""
-        for w in jr.workers:
+        affinity tasks float (recorded as an even spread).  ``workers``
+        restricts the pass to a subset (the fault engine's regrow path
+        pins only the restored workers)."""
+        for w in (jr.workers if workers is None else workers):
             node = self.cluster.node(w.node)
             w.domains = {}
             if not self.sc.affinity:

@@ -46,6 +46,15 @@ with every other scattered gang — prediction and execution read the
 same model (``Simulator._speed`` and the contention estimator both call
 the pure ``estimates.job_speed`` with the topology's ``net`` factors).
 
+**Link health** (fault-engine hook): ``link_health[link] -> factor``
+multiplies the link's effective bandwidth — a degraded uplink at 0.4
+or a dead spine at its residual floor (surviving parallel capacity)
+slows every gang crossing it through the same stress formula, and
+never kills a placement.  ``FaultEngine`` drives it via
+:meth:`set_link_health` when ``FaultConfig.link_mtbf`` is set; with the
+map empty (the default) every read short-circuits and the arithmetic
+is bit-identical to the healthy model.
+
 **Placement** (infrastructure layer): with ``TopologyConfig.packing``
 the task-group binder prefers packing a NETWORK gang's workers under
 one switch — served by the per-switch dimension of
@@ -176,6 +185,9 @@ class NetworkTopology:
         self.rank_aware = cfg.rank_aware
         self.traffic: Dict[tuple, int] = {}
         self.users: Dict[tuple, set] = {}
+        # link -> effective-bandwidth factor (fault engine's link-scoped
+        # down/degraded events); absent key = healthy (factor 1.0)
+        self.link_health: Dict[tuple, float] = {}
 
     # ---------------- link enumeration -------------------------------------
     def _links_for(self, nodes: Dict[str, int]) -> List[tuple]:
@@ -228,8 +240,12 @@ class NetworkTopology:
                 continue
             # co-users' stress through this link moved only if the link
             # is now oversubscribed (below capacity it is the constant
-            # hop penalty 1/bw) — skip the dirty ripple otherwise
-            if dirty is not None and new > bwmap[key[0]] * lt:
+            # hop penalty 1/bw) — skip the dirty ripple otherwise.  An
+            # unhealthy link's saturation point is scaled down, so any
+            # traffic change there re-prices co-users.
+            if dirty is not None and (
+                    new > bwmap[key[0]] * lt
+                    or (self.link_health and key in self.link_health)):
                 for u in us:
                     un = u._nodes
                     if un:
@@ -263,10 +279,14 @@ class NetworkTopology:
                 us.discard(jr)
                 if not us:
                     del users[key]
-                elif dirty is not None and old > bwmap[key[0]] * lt:
-                    # the link was oversubscribed: the survivors' stress
-                    # just dropped — re-price them.  Below capacity the
-                    # release changes nothing (constant hop penalty).
+                elif dirty is not None and (
+                        old > bwmap[key[0]] * lt
+                        or (self.link_health and key in self.link_health)):
+                    # the link was oversubscribed (or unhealthy, where
+                    # the saturation point sits lower): the survivors'
+                    # stress just dropped — re-price them.  Below
+                    # capacity on a healthy link the release changes
+                    # nothing (constant hop penalty).
                     for u in us:
                         un = u._nodes
                         if un:
@@ -275,21 +295,60 @@ class NetworkTopology:
         perf["topo_releases"] += 1
         perf["topo_s"] += time.perf_counter() - t0
 
+    # ---------------- link health (fault-engine hook) -----------------------
+    def faultable_links(self) -> List[tuple]:
+        """Deterministic enumeration of every physical link the fault
+        engine can draw events against: each node's leaf link, each rack
+        switch's uplink, each pod's spine attachment (in cluster /
+        sorted-id order, so the injector's RNG stream is stable)."""
+        links: List[tuple] = [("leaf", n.name) for n in self.sim.cluster.nodes]
+        if self.n_switches > 1:
+            links.extend(("up", s) for s in sorted(self.pod_of))
+            pods = sorted(set(self.pod_of.values()))
+            if len(pods) > 1:
+                links.extend(("spine", p) for p in pods)
+        return links
+
+    def set_link_health(self, key: tuple, factor: Optional[float],
+                        dirty: Optional[set]):
+        """Set (or with ``factor=None`` clear) a link's effective-
+        bandwidth factor and re-price every gang currently crossing it —
+        unconditionally, because the hop penalty itself moved, not just
+        the saturation term."""
+        if factor is None:
+            self.link_health.pop(key, None)
+        else:
+            self.link_health[key] = factor
+        if dirty is not None:
+            us = self.users.get(key)
+            if us:
+                for u in us:
+                    un = u._nodes
+                    if un:
+                        dirty.update(un)
+
     # ---------------- speed-model inputs ------------------------------------
     def stress(self, jr) -> float:
         """Bottleneck stress over the gang's registered links:
         ``max(1, traffic / capacity) / bw`` — the hop penalty ``1/bw``
         at no saturation, growing once the link is oversubscribed.
-        1.0 for gangs using no inter-node links."""
+        1.0 for gangs using no inter-node links.  An unhealthy link's
+        ``bw`` is scaled by its ``link_health`` factor, raising both the
+        hop penalty and the effective saturation."""
         links = jr._net_links
         if not links:
             return 1.0
         traffic = self.traffic
         lt = self.cfg.link_tasks
         bwmap = self.bw
+        health = self.link_health
         worst = 1.0
         for key, amt in links:
             bw = bwmap[key[0]]
+            if health:
+                h = health.get(key)
+                if h is not None:
+                    bw = bw * h
             s = max(1.0, traffic.get(key, amt) / (bw * lt)) / bw
             if s > worst:
                 worst = s

@@ -84,7 +84,7 @@ def inject(sim, t, kind, payload, force_kind=None):
 # ----------------------------------------------------------------------
 def test_prefault_scenarios_have_injector_off():
     for name, sc in SCENARIOS.items():
-        if name == "FLEET_FAULTS":
+        if name in ("FLEET_FAULTS", "FLEET_RECOVERY"):
             assert sc.faults is not None
         else:
             assert sc.faults is None, f"{name} grew a fault injector"

@@ -185,6 +185,81 @@ def test_remaining_estimator_fleet_traces_pinned(scn, failures, want):
     assert trace_hash(sim, done) == want
 
 
+# ----------------------------------------------------------------------
+# recovery flags off is not a behaviour change: link faults
+# (``FaultConfig.link_mtbf``), elastic regrowth (``ResiliencePolicy
+# .regrow``) and resume-reservations (``queue_cfg["resume_reservation"]``)
+# all default off — runs that set them *explicitly* off must produce the
+# same trace as runs that never mention them, and both are pinned so a
+# later change to the default-off paths cannot drift silently.  (The
+# pre-PR-8 pins above re-assert the same property for every faultless
+# scenario: those hashes were recorded before the flags existed.)
+# ----------------------------------------------------------------------
+def _fleet_storm_hash(faults=None, resilience=None, queue_cfg=None):
+    from repro.core import faults as FLT
+    kw = {}
+    if faults is not None:
+        kw["faults"] = faults
+    if resilience is not None:
+        kw["resilience"] = resilience
+    if queue_cfg is not None:
+        kw["queue_cfg"] = queue_cfg
+    sc = dc.replace(SCENARIOS["FLEET_FAULTS"], ckpt_interval=250.0, **kw)
+    subs = poisson_heavy_traffic(60, 64, seed=2, elastic_frac=0.3)
+    sim = Simulator(small_fleet(16), sc, seed=2)
+    done = sim.run(list(subs))
+    return trace_hash(sim, done)
+
+
+def test_recovery_flags_off_storm_trace_pinned():
+    from repro.core import faults as FLT
+    implicit = _fleet_storm_hash()
+    explicit = _fleet_storm_hash(
+        faults=FLT.FaultConfig(link_mtbf=None),
+        resilience=FLT.ResiliencePolicy(regrow=False))
+    assert implicit == explicit == "812dfa07a36af609"
+
+
+def _prio_preempt_hash(queue_cfg):
+    sc = dc.replace(SCENARIOS["FLEET_PRIO"], queue_cfg=queue_cfg)
+    subs = [(dc.replace(w, priority=i % 3), t) for i, (w, t) in enumerate(
+        poisson_heavy_traffic(60, 64, seed=2, unique_names=True))]
+    sim = Simulator(small_fleet(16), sc, seed=2)
+    done = sim.run(subs)
+    return trace_hash(sim, done)
+
+
+def test_resume_reservation_off_trace_pinned():
+    base = {"preempt": True, "preempt_min_prio": 2, "preempt_delay": 60.0}
+    implicit = _prio_preempt_hash(base)
+    explicit = _prio_preempt_hash(
+        dict(base, resume_reservation=False))
+    assert implicit == explicit == "992fcda19f19cf0f"
+
+
+def test_link_faults_off_with_topology_trace_pinned():
+    """Node faults + topology active, ``link_mtbf=None``: the link
+    lifecycle must schedule nothing and perturb nothing (the injector's
+    RNG stream must not move) — pinned with the flag set explicitly."""
+    from repro.core import faults as FLT
+    from repro.core.cluster import fleet_cluster
+
+    def run():
+        sc = dc.replace(SCENARIOS["FLEET_TOPO"], ckpt_interval=250.0,
+                        faults=FLT.FaultConfig(node_mtbf=6_000.0,
+                                               link_mtbf=None),
+                        resilience=FLT.ResiliencePolicy(regrow=False))
+        cluster = fleet_cluster(2, 8)
+        subs = poisson_heavy_traffic(60, cluster.total_slots, seed=2,
+                                     elastic_frac=0.3)
+        sim = Simulator(cluster, sc, seed=2)
+        done = sim.run(list(subs))
+        assert sim.perf["link_downs"] == sim.perf["link_degrades"] == 0
+        return trace_hash(sim, done)
+
+    assert run() == "63786aa22683c02b"
+
+
 def test_explicit_fifo_equals_default_queue():
     """``queue="fifo"`` and the default ``queue=None`` are one discipline."""
     scn = dc.replace(SCENARIOS["CM_G_TG"], queue="fifo")

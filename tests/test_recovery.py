@@ -1,0 +1,481 @@
+"""Recovery-complete resilience: link faults, regrowth, resume-claims.
+
+The degrade -> recover loop across both layers (PR 8):
+
+* **Link-scoped faults** (scripted, deterministic): a down/degraded
+  fabric link slows every NETWORK gang crossing it through the
+  bottleneck-stress term and *never* kills a placement; repair restores
+  the healthy speed and drains ``link_health`` clean.
+* **Elastic regrowth** (scripted + overlay units): a shrunken elastic
+  gang re-expands to full width at its next checkpoint boundary once
+  recovery returns capacity — staged claims withhold exactly their
+  planned slots from every other gang.
+* **Resume-reservations** (scripted twin-run): a preemption victim's
+  freed slots are earmarked for its requeue once the preempting head
+  starts, so backfill cannot starve the victim out of its own capacity.
+* **Event hygiene** (units): cancelled retry/regrow timers are dead
+  tokens — a popped stale event no-ops and ``work_pending`` cannot hold
+  the loop alive for a job that reached a terminal state.
+* **Recovery storm** (property-style, both event loops): link down/up x
+  node faults x regrow x resume under heavy elastic traffic — no job
+  lost, free capacity never negative, link traffic conserved (audited
+  mid-run after every shrink/teardown/regrow), every overlay drained at
+  quiesce, regrown gangs at full width, resumed victims complete.
+"""
+import dataclasses as dc
+import types
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import faults as FLT
+from repro.core.cluster import fleet_cluster
+from repro.core.profiles import Profile, Workload
+from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
+from repro.core.simulator import Simulator
+from repro.core.topology import TopologyConfig
+from test_faults import small_fleet
+
+pytestmark = pytest.mark.recovery
+
+
+class _FakeJr:
+    """Hashable stand-in for a JobRun in engine-level unit tests (the
+    retry/regrow token maps key by the job object)."""
+    _avoid = None
+    _lost_workers = None
+    _shrunk_t = None
+
+
+def scripted_recovery(cluster=None, pol=None, scn_kw=None, **fault_kw):
+    """A FLEET_RECOVERY simulator whose injector fires ONLY hand-
+    scheduled events (same construction as ``test_faults.scripted_sim``,
+    plus the topology layer the link lifecycle needs)."""
+    fault_kw.setdefault("node_mtbf", 1e12)
+    fault_kw.setdefault("link_mtbf", 1e15)
+    fault_kw.setdefault("repair_jitter", 0.0)
+    sc = dc.replace(SCENARIOS["FLEET_RECOVERY"],
+                    faults=FLT.FaultConfig(**fault_kw),
+                    resilience=pol or FLT.ResiliencePolicy(regrow=True),
+                    **(scn_kw or {}))
+    sim = Simulator(cluster or fleet_cluster(2, 8), sc, seed=0)
+    sim.faults.events.clear()
+    return sim
+
+
+# ----------------------------------------------------------------------
+# link lifecycle: slows, never kills; repair restores
+# ----------------------------------------------------------------------
+def _net_gang_run(p_down, inject_at=None, repair=200.0):
+    """One 8-task NETWORK gang (force_split: spans >= 2 hosts) with every
+    leaf link faulted at ``inject_at`` — deterministic whatever nodes the
+    binder picked."""
+    sim = scripted_recovery(link_p_down=p_down, link_repair=repair)
+    if inject_at is not None:
+        for key in sim.topo.faultable_links():
+            if key[0] == "leaf":
+                sim.faults._schedule(inject_at, FLT._LINK, key)
+    done = sim.run([(Workload("net", Profile.NETWORK, 8, 400.0,
+                              uid="net"), 0.0)])
+    assert len(done) == 1 and not sim.failed and not sim.unschedulable
+    return sim, done[0]
+
+
+def test_link_degrade_slows_and_repair_restores():
+    _, clean = _net_gang_run(p_down=0.0)
+    sim, j = _net_gang_run(p_down=0.0, inject_at=50.0, repair=200.0)
+    assert j.finish_t > clean.finish_t          # degraded links cost time
+    n_leaf = len(sim.cluster.nodes)
+    assert sim.perf["link_degrades"] == n_leaf
+    assert sim.perf["link_downs"] == 0
+    # repairs fired mid-run (t=250 < finish): health drained clean
+    assert sim.perf["link_repairs"] == n_leaf
+    assert sim.topo.link_health == {} and sim.faults.link_state == {}
+    # a link fault never kills: no teardown, no retry, one clean run
+    assert sim.perf["fault_kills"] == 0 and j.retries == 0
+    assert sim.topo.pending_traffic() == {}
+
+
+def test_link_down_floor_is_worse_than_degrade():
+    _, clean = _net_gang_run(p_down=0.0)
+    _, degraded = _net_gang_run(p_down=0.0, inject_at=50.0)
+    _, downed = _net_gang_run(p_down=1.0, inject_at=50.0)
+    assert downed.finish_t > degraded.finish_t > clean.finish_t
+
+
+def test_link_fault_on_unhealthy_link_only_redraws():
+    """A second fault on an already-unhealthy link must not double-count
+    (repair is pending) — and a second repair is a no-op."""
+    sim = scripted_recovery(link_p_down=0.0)
+    key = ("leaf", sim.cluster.nodes[0].name)
+    sim.faults._on_link_fault(key, None)
+    assert sim.faults.link_state[key] == "degraded"
+    assert sim.topo.link_health[key] == pytest.approx(
+        sim.faults.cfg.link_degrade_factor)
+    sim.faults._on_link_fault(key, None)
+    assert sim.perf["link_degrades"] == 1
+    sim.faults._on_link_repair(key, None)
+    assert sim.faults.link_state == {} and sim.topo.link_health == {}
+    sim.faults._on_link_repair(key, None)
+    assert sim.perf["link_repairs"] == 1
+
+
+def test_faultable_links_cover_the_tree():
+    sim = scripted_recovery()          # 2 pods x 8 hosts, 1 switch each
+    links = sim.topo.faultable_links()
+    kinds = {}
+    for k in links:
+        kinds[k[0]] = kinds.get(k[0], 0) + 1
+    assert kinds == {"leaf": 16, "up": 2, "spine": 2}
+    assert len(set(links)) == len(links)
+
+
+def test_link_only_storm_completes_with_zero_jobs_lost():
+    """Pure link degradation (no node faults in the run horizon): every
+    job completes — the acceptance property the benchmark re-checks."""
+    cluster = fleet_cluster(2, 8)
+    subs = poisson_heavy_traffic(40, cluster.total_slots, seed=7,
+                                 utilization=0.9, elastic_frac=0.3)
+    sc = dc.replace(SCENARIOS["FLEET_RECOVERY"],
+                    faults=FLT.FaultConfig(node_mtbf=1e12,
+                                           link_mtbf=2_000.0,
+                                           link_repair=500.0))
+    sim = Simulator(cluster, sc, seed=7)
+    done = sim.run(list(subs))
+    assert len(done) == len(subs)
+    assert not sim.failed and not sim.unschedulable
+    assert sim.perf["link_downs"] + sim.perf["link_degrades"] > 0
+    assert sim.perf["fault_kills"] == 0
+    assert sim.topo.pending_traffic() == {}
+    # whatever is still unhealthy at quiesce is exactly what the engine
+    # says is unhealthy (repair events may be pending past the last job)
+    assert set(sim.faults.link_state) == set(sim.topo.link_health)
+
+
+# ----------------------------------------------------------------------
+# elastic regrowth: shrink -> recover -> full width at a ckpt boundary
+# ----------------------------------------------------------------------
+def _regrow_run(regrow):
+    pol = FLT.ResiliencePolicy(regrow=regrow, daly=False,
+                               backoff_base=0.0)
+    sim = scripted_recovery(cluster=fleet_cluster(1, 4), pol=pol,
+                            scn_kw={"ckpt_interval": 50.0},
+                            repair_time=150.0)
+    victim = sim.cluster.nodes[-1].name
+    sim.faults._kind_cdf = [(1.0, "transient")]
+    sim.faults._schedule(100.0, FLT._FAULT, victim)
+    done = sim.run([(Workload("e", Profile.CPU, 16, 600.0, uid="e",
+                              elastic=True), 0.0)])
+    assert len(done) == 1 and not sim.failed
+    return sim, done[0]
+
+
+def test_elastic_gang_regrows_to_full_width():
+    sim, j = _regrow_run(regrow=True)
+    assert j.shrinks == 1 and j.regrows == 1
+    assert j._width_factor == 1.0
+    assert sum(w.n_tasks for w in j.workers) == j.gran.n_tasks
+    assert j._lost_workers is None
+    assert sim.perf["regrows"] == 1
+    assert sim.perf["regrow_wait_s"] > 0.0
+    # claim machinery drained clean
+    assert not sim.faults._shrunken and not sim.faults._regrow_hold
+    assert not sim.faults._regrow_plan and not sim.faults._regrow_live
+    assert not sim.faults._restage_live
+    assert sim.topo.pending_traffic() == {}
+
+
+def test_regrow_beats_running_shrunken():
+    """Restoring full width (one checkpoint interval of rework at most)
+    must finish the 600 s gang sooner than limping at 12/16 width."""
+    _, shrunk = _regrow_run(regrow=False)
+    _, regrown = _regrow_run(regrow=True)
+    assert shrunk.shrinks == 1 and shrunk.regrows == 0
+    assert shrunk._width_factor == pytest.approx(12.0 / 16.0)
+    assert regrown.finish_t < shrunk.finish_t
+
+
+def test_regrow_waits_for_capacity():
+    """While the failed node is down the lost workers do not fit (the
+    surviving 3 hosts are full): the gang must wait in the shrunken set
+    with no claim staged until the recovery returns capacity."""
+    pol = FLT.ResiliencePolicy(regrow=True, daly=False, backoff_base=0.0)
+    sim = scripted_recovery(cluster=fleet_cluster(1, 4), pol=pol,
+                            scn_kw={"ckpt_interval": 50.0},
+                            repair_time=150.0)
+    victim = sim.cluster.nodes[-1].name
+    sim.faults._kind_cdf = [(1.0, "transient")]
+    sim.faults._schedule(100.0, FLT._FAULT, victim)
+
+    staged_at = []
+    orig = FLT.FaultEngine._on_regrow
+
+    def audited(self, jr, seq, dirty):
+        orig(self, jr, seq, dirty)
+        if jr.regrows:
+            staged_at.append(self.sim.now)
+
+    sim.faults._on_regrow = types.MethodType(audited, sim.faults)
+    sim.run([(Workload("e", Profile.CPU, 16, 600.0, uid="e",
+                       elastic=True), 0.0)])
+    # the regrow fired strictly after the node recovery at t=250
+    assert staged_at and staged_at[0] > 250.0
+
+
+def test_regrow_hold_composes_additively_into_the_overlay():
+    sim = scripted_recovery()
+    eng = sim.faults
+    name = sim.cluster.nodes[0].name
+    jr = types.SimpleNamespace(_avoid=None)
+    assert eng.merge_overlay(jr, None) is None
+    eng._regrow_hold[object()] = {name: 3}
+    assert eng.merge_overlay(jr, None) == {name: 3}
+    # additive with whatever else is reserved on the node (the claim
+    # protects specific slots, not the whole node)
+    assert eng.merge_overlay(jr, {name: 2, "other": 1}) \
+        == {name: 5, "other": 1}
+
+
+# ----------------------------------------------------------------------
+# event hygiene: cancelled timers are dead tokens
+# ----------------------------------------------------------------------
+def test_cancelled_retry_does_not_hold_the_loop():
+    sim = scripted_recovery()
+    eng = sim.faults
+    jr = _FakeJr()
+    eng._schedule(100.0, FLT._RETRY, jr)
+    assert eng.work_pending() and eng._in_backoff == 1
+    eng.cancel_job_events(jr)
+    assert not eng.work_pending() and eng._in_backoff == 0
+    # the stale heap entry no-ops on pop (token mismatch)
+    fired = []
+    eng._on_retry = fired.append
+    sim.now = 200.0
+    eng.process_due(None)
+    assert fired == [] and eng._in_backoff == 0 and not eng.events
+
+
+def test_rescheduled_retry_counts_backoff_once():
+    """Re-scheduling a job's retry replaces its live token: the backoff
+    counter stays at one and only the latest event fires."""
+    sim = scripted_recovery()
+    eng = sim.faults
+    jr = _FakeJr()
+    eng._schedule(50.0, FLT._RETRY, jr)
+    eng._schedule(60.0, FLT._RETRY, jr)
+    assert eng._in_backoff == 1
+    fired = []
+    eng._on_retry = fired.append
+    sim.now = 100.0
+    eng.process_due(None)
+    assert fired == [jr]
+    assert eng._in_backoff == 0 and not eng._retry_live
+
+
+def test_cancel_clears_regrow_claim_and_lost_workers():
+    sim = scripted_recovery()
+    eng = sim.faults
+    jr = _FakeJr()
+    jr._lost_workers = ["w"]
+    jr._shrunk_t = 10.0
+    eng._shrunken[jr] = None
+    eng._regrow_plan[jr] = [("w", "n")]
+    eng._regrow_hold[jr] = {"n": 1}
+    eng._regrow_live[jr] = 7
+    eng._restage_live[jr] = 9
+    eng.cancel_job_events(jr)
+    assert not eng._shrunken and not eng._regrow_hold
+    assert not eng._regrow_plan and not eng._regrow_live
+    assert not eng._restage_live
+    assert jr._lost_workers is None and jr._shrunk_t is None
+
+
+# ----------------------------------------------------------------------
+# resume-reservations: a victim's freed slots come back to it
+# ----------------------------------------------------------------------
+def _resume_run(flag):
+    # skip-ahead admission on: the starvation vector the claims guard
+    # against (without it a blocked head blocks everyone anyway)
+    sc = dc.replace(SCENARIOS["FLEET_PRIO"], backfill=True,
+                    queue_cfg={"preempt": True, "preempt_min_prio": 2,
+                               "preempt_delay": 0.0,
+                               "resume_reservation": flag})
+    sim = Simulator(small_fleet(3, 4), sc, seed=0)
+    subs = [
+        (Workload("A", Profile.CPU, 4, 600.0, uid="A", priority=0), 0.0),
+        (Workload("V", Profile.CPU, 4, 600.0, uid="V", priority=0), 0.0),
+        (Workload("C", Profile.CPU, 4, 600.0, uid="C", priority=0), 0.0),
+        (Workload("H", Profile.CPU, 8, 300.0, uid="H", priority=2), 50.0),
+        (Workload("B", Profile.CPU, 4, 100.0, uid="B", priority=1), 60.0),
+    ]
+    done = sim.run(list(subs))
+    assert len(done) == len(subs) and not sim.failed
+    return sim, {j.uid: j for j in done}
+
+
+def test_resume_reservation_restores_victims_before_backfill():
+    """H preempts two prio-0 gangs at t=50; when H finishes, the claims
+    hand the freed slots back to the victims instead of letting the
+    mid-priority backfill B (fresher, higher class) snatch them."""
+    off_sim, off = _resume_run(False)
+    on_sim, on = _resume_run(True)
+    assert off_sim.perf["resume_holds"] == 0
+    assert on_sim.perf["resume_holds"] == 2
+    assert on_sim.perf["resume_releases"] == 2
+    assert on_sim.discipline._resume == []
+    victims_on = [j for j in on.values() if j.preemptions > 0]
+    victims_off = [j for j in off.values() if j.preemptions > 0]
+    assert len(victims_on) == len(victims_off) == 2
+    # with claims, the *last* victim restarts when the head finishes;
+    # without, it waits behind the backfill that took its slots.  The
+    # restart moment is not recorded (start_t is the first start), but
+    # both runs kill the victims at the same instant with the same
+    # checkpoint quantization, so finish times order the restarts.
+    assert max(j.finish_t for j in victims_on) \
+        < max(j.finish_t for j in victims_off)
+    # the backfill pays: it runs after the victims instead of before
+    assert on["B"].start_t > off["B"].start_t
+    # the protected head is unaffected either way
+    assert on["H"].start_t == off["H"].start_t
+
+
+def test_resume_claims_inert_when_nothing_runs():
+    """The lift rule: with no running gang there is no natural release
+    path, so claims must not withhold anything (deadlock guard)."""
+    sim, _ = _resume_run(True)
+    d = sim.discipline
+    d._resume.append({"head": object(), "victim": object(),
+                      "nodes": {sim.cluster.nodes[0].name: 4},
+                      "armed": True})
+    jr = types.SimpleNamespace()
+    assert not sim.running
+    assert d.merge_overlay(jr, None) is None
+    sim.running[object()] = None
+    assert d.merge_overlay(jr, None) \
+        == {sim.cluster.nodes[0].name: 4}
+
+
+# ----------------------------------------------------------------------
+# recovery storm: everything on, both loops, audited mid-run
+# ----------------------------------------------------------------------
+def _recovery_storm_scenario(mtbf, regrow, resume, topology=None):
+    kw = {} if topology is None else {"topology": topology}
+    return dc.replace(
+        SCENARIOS["FLEET_RECOVERY"], ckpt_interval=250.0, **kw,
+        queue_cfg={"preempt": True, "preempt_min_prio": 2,
+                   "preempt_delay": 30.0, "resume_reservation": resume},
+        faults=FLT.FaultConfig(node_mtbf=mtbf, domain_mtbf=10.0 * mtbf,
+                               domain_repair=400.0, link_mtbf=2_500.0,
+                               link_repair=500.0),
+        resilience=FLT.ResiliencePolicy(max_retries=4, regrow=regrow))
+
+
+def _storm_subs(cluster, seed, n=50):
+    subs = poisson_heavy_traffic(n, cluster.total_slots, seed=seed,
+                                 elastic_frac=0.4)
+    # stamp priority classes so preemption (and with it the resume
+    # machinery) actually fires under the priority discipline
+    return [(dc.replace(w, priority=i % 3), t)
+            for i, (w, t) in enumerate(subs)]
+
+
+def _audit_registry(sim):
+    """Wrap every teardown/regrow path with the link-registry symmetry
+    audit: after each, the live traffic map must equal the placement
+    oracle recomputed from the running set."""
+    for name in ("_shrink", "_take_down", "_on_regrow"):
+        orig = getattr(FLT.FaultEngine, name)
+
+        def audited(self, *a, __orig=orig, **kw):
+            __orig(self, *a, **kw)
+            topo = self.sim.topo
+            assert topo.pending_traffic() == topo.expected_traffic()
+
+        setattr(sim.faults, name, types.MethodType(audited, sim.faults))
+    orig_regrow = sim.faults._on_regrow
+
+    def regrow_checked(jr, seq, dirty):
+        orig_regrow(jr, seq, dirty)
+        if not sim.faults._regrow_live.get(jr) and jr in sim.running \
+                and jr._lost_workers is None:
+            # the regrow actually fired: full width, full task count
+            assert jr._width_factor == 1.0
+            assert sum(w.n_tasks for w in jr.workers) == jr.gran.n_tasks
+
+    sim.faults._on_regrow = regrow_checked
+
+
+@pytest.mark.property
+@pytest.mark.faults
+@given(seed=st.integers(0, 10_000), legacy=st.booleans(),
+       regrow=st.booleans(), resume=st.booleans(),
+       mtbf=st.sampled_from([3_000.0, 8_000.0]))
+@settings(max_examples=10, deadline=None)
+def test_recovery_storm_invariants(seed, legacy, regrow, resume, mtbf):
+    cluster = fleet_cluster(2, 8)
+
+    class Guard:
+        def on_free_change(self, name, free):
+            node = cluster.node(name)
+            assert 0 <= node.used, f"{name}: used {node.used} < 0"
+            assert free == node.n_slots - node.used
+
+        def on_rebuild(self):
+            pass
+
+    cluster.attach(Guard())
+    subs = _storm_subs(cluster, seed)
+    sc = _recovery_storm_scenario(mtbf, regrow, resume)
+    sim = Simulator(cluster, sc, seed=seed)
+    _audit_registry(sim)
+    done = sim.run(list(subs), legacy=legacy)
+    # conservation: every submission is done, failed, or unschedulable
+    assert len(done) + len(sim.failed) + len(sim.unschedulable) \
+        == len(subs)
+    assert len({j.uid for j in done}) == len(done)
+    for j in done:
+        assert j.retries <= sc.resilience.max_retries
+        assert j.finish_t is not None and j.remaining <= 1e-6
+    # state drains clean: loop-holding work, overlays, link registry
+    assert not sim.running and not sim.queue
+    assert not sim.faults.work_pending()
+    assert not sim.faults._retry_live
+    assert not sim.faults._shrunken and not sim.faults._regrow_hold
+    assert not sim.faults._regrow_plan and not sim.faults._regrow_live
+    assert not sim.faults._restage_live
+    assert sim.topo.pending_traffic() == {}
+    assert set(sim.faults.link_state) == set(sim.topo.link_health)
+    # resume claims are released unless the sweep cut a party off
+    if resume and not sim.unschedulable:
+        assert sim.discipline._resume == []
+    assert sim.perf["resume_releases"] <= sim.perf["resume_holds"]
+    assert sim.cluster.free_slots == sim.cluster.total_slots
+
+
+@pytest.mark.property
+@pytest.mark.faults
+def test_heap_loop_matches_legacy_under_recovery_storm():
+    """Twin-run oracle with every PR-8 feature on: link faults, regrowth
+    and resume-reservations must be loop-agnostic like the rest of the
+    engine (deterministic staging, no RNG outside the injector)."""
+    def trace(legacy):
+        cluster = fleet_cluster(2, 8)
+        subs = _storm_subs(cluster, seed=1)
+        # topology packing is an indexed-path feature (the legacy
+        # binder places topology-blind), so the twin runs place under a
+        # blind topology — the speed model and link faults stay on
+        blind = TopologyConfig(packing=False, rank_aware=False)
+        sim = Simulator(cluster,
+                        _recovery_storm_scenario(4_000.0, True, True,
+                                                 topology=blind),
+                        seed=1)
+        done = sim.run(list(subs), legacy=legacy)
+        rows = sorted((j.uid, round(j.start_t, 6), round(j.finish_t, 6),
+                       j.shrinks, j.regrows, j.preemptions,
+                       tuple(sorted(j.nodes_used.items())))
+                      for j in done)
+        rows.append(tuple(sorted(j.uid for j in sim.failed)))
+        rows.append(tuple(sorted(j.uid for j in sim.unschedulable)))
+        return rows
+
+    assert trace(False) == trace(True)

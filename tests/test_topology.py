@@ -365,13 +365,15 @@ def test_link_traffic_conservation_with_scripted_failures():
 
 @pytest.mark.faults
 def test_fault_engine_leaves_no_stale_link_traffic(monkeypatch):
-    """Domain blasts (whole-pod ``_take_down`` storms) and elastic
-    shrinks (the one teardown that bypasses ``_on_stop``) must leave the
-    registry exactly matching the running set's placements — audited
-    after every fault-engine teardown, not just at drain."""
+    """Domain blasts (whole-pod ``_take_down`` storms), elastic shrinks
+    and regrows (the two placement mutations that bypass ``_on_stop`` /
+    ``_on_start``) must leave the registry exactly matching the running
+    set's placements — audited after every fault-engine teardown and
+    re-expansion, not just at drain."""
     orig_shrink = FLT.FaultEngine._shrink
     orig_down = FLT.FaultEngine._take_down
-    audits = {"shrink": 0, "down": 0}
+    orig_regrow = FLT.FaultEngine._on_regrow
+    audits = {"shrink": 0, "down": 0, "regrow": 0}
 
     def shrink(self, jr, node_name, dirty):
         orig_shrink(self, jr, node_name, dirty)
@@ -385,14 +387,23 @@ def test_fault_engine_leaves_no_stale_link_traffic(monkeypatch):
         assert topo.pending_traffic() == topo.expected_traffic()
         audits["down"] += 1
 
+    def regrow(self, jr, seq, dirty):
+        orig_regrow(self, jr, seq, dirty)
+        topo = self.sim.topo
+        assert topo.pending_traffic() == topo.expected_traffic()
+        audits["regrow"] += 1
+
     monkeypatch.setattr(FLT.FaultEngine, "_shrink", shrink)
     monkeypatch.setattr(FLT.FaultEngine, "_take_down", down)
+    monkeypatch.setattr(FLT.FaultEngine, "_on_regrow", regrow)
     sim, done = _heavy_net_run(
         5, elastic_frac=1.0,
         faults=FLT.FaultConfig(node_mtbf=6_000.0, domain_mtbf=4_000.0,
                                domain_repair=400.0),
-        resilience=FLT.ResiliencePolicy(backoff_base=0.0, daly=False))
+        resilience=FLT.ResiliencePolicy(backoff_base=0.0, daly=False,
+                                        regrow=True))
     assert audits["down"] > 0 and audits["shrink"] > 0
+    assert audits["regrow"] > 0 and sim.perf["regrows"] > 0
     assert sim.perf["domain_faults"] > 0 and sim.perf["shrinks"] > 0
     assert sim.topo.pending_traffic() == {}
     assert sim.perf["topo_registers"] == sim.perf["topo_releases"]
