@@ -1,0 +1,112 @@
+"""Perf-trajectory report: diff two ``BENCH_*.json`` files.
+
+The benchmark harness mirrors its CSV rows into ``BENCH_*.json`` so the
+perf trajectory is machine-readable across PRs; this tool closes the
+loop by comparing two such files (e.g. the checked-in baseline vs a
+fresh run) and flagging per-row regressions past a threshold:
+
+  python -m benchmarks.report OLD.json NEW.json [--threshold 10]
+                              [--fail-on-regress]
+
+Understands both row shapes the harness writes:
+
+* ``{"rows": [{"name", "us_per_call", ...}, ...]}``  (BENCH_sched.json)
+* ``{"rows": {"arm": {"us_per_event": ...}, ...}}``  (BENCH_telemetry.json)
+* ``{"results": [{"scenario", "mode", "hosts", "us_per_event", ...}]}``
+  (BENCH_sim_scale.json — row names synthesized from the sweep axes)
+
+Rows present on only one side are reported but never fail the diff
+(benchmark sets grow PR over PR).  Exit status is 0 unless
+``--fail-on-regress`` is given and at least one regression crossed the
+threshold.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+
+def load_rows(path: str) -> Dict[str, float]:
+    """Normalize a BENCH_*.json into ``{row_name: cost}``."""
+    with open(path) as f:
+        data = json.load(f)
+    rows = data.get("rows", data.get("results", data))
+    out: Dict[str, float] = {}
+    if isinstance(rows, list):
+        for r in rows:
+            if not isinstance(r, dict):
+                continue
+            name = r.get("name") or "_".join(
+                str(r[k]) for k in ("scenario", "mode", "hosts")
+                if k in r)
+            val = r.get("us_per_call", r.get("us_per_event"))
+            if name and isinstance(val, (int, float)):
+                out[str(name)] = float(val)
+    elif isinstance(rows, dict):
+        for name, r in rows.items():
+            if isinstance(r, dict):
+                val = r.get("us_per_call", r.get("us_per_event"))
+                if isinstance(val, (int, float)):
+                    out[str(name)] = float(val)
+    return out
+
+
+def diff(old: Dict[str, float], new: Dict[str, float],
+         threshold_pct: float = 10.0) -> dict:
+    """Compare two normalized row maps.  A row regresses when its cost
+    grows more than ``threshold_pct`` percent over the old value (rows
+    at ~0 cost are compared on absolute growth > 1us to dodge noise)."""
+    shared = sorted(set(old) & set(new))
+    rows, regressions = [], []
+    for name in shared:
+        o, n = old[name], new[name]
+        if o > 1e-6:
+            delta_pct = 100.0 * (n / o - 1.0)
+            regressed = delta_pct > threshold_pct
+        else:
+            delta_pct = None
+            regressed = n - o > 1.0
+        row = {"name": name, "old": o, "new": n,
+               "delta_pct": None if delta_pct is None
+               else round(delta_pct, 1),
+               "regressed": regressed}
+        rows.append(row)
+        if regressed:
+            regressions.append(row)
+    return {"rows": rows, "regressions": regressions,
+            "only_old": sorted(set(old) - set(new)),
+            "only_new": sorted(set(new) - set(old)),
+            "threshold_pct": threshold_pct}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="regression threshold in percent (default 10)")
+    ap.add_argument("--fail-on-regress", action="store_true",
+                    help="exit 1 when any row regresses past threshold")
+    args = ap.parse_args(argv)
+    report = diff(load_rows(args.old), load_rows(args.new),
+                  threshold_pct=args.threshold)
+    print(f"{'row':40s} {'old':>10s} {'new':>10s} {'delta':>8s}")
+    for r in report["rows"]:
+        d = "n/a" if r["delta_pct"] is None else f"{r['delta_pct']:+.1f}%"
+        flag = "  << REGRESSION" if r["regressed"] else ""
+        print(f"{r['name']:40s} {r['old']:10.1f} {r['new']:10.1f} "
+              f"{d:>8s}{flag}")
+    for name in report["only_old"]:
+        print(f"{name:40s} (dropped)")
+    for name in report["only_new"]:
+        print(f"{name:40s} (new row)")
+    n = len(report["regressions"])
+    print(f"\n{n} regression(s) past {args.threshold:.0f}% across "
+          f"{len(report['rows'])} shared row(s)")
+    return 1 if (n and args.fail_on_regress) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV at the end (harness contract) and
 mirrors the rows into ``BENCH_sched.json`` so perf trajectory is machine-
 readable across PRs.
 
-  python -m benchmarks.run [--only exp1|exp2|exp3|sched|backfill|faults|roofline|sim_scale]
+  python -m benchmarks.run [--only exp1|exp2|exp3|sched|backfill|faults|roofline|sim_scale|telemetry]
                            [--smoke]
 
 ``--smoke`` runs a reduced sweep: jobs that support it (sched, sim_scale)
@@ -17,7 +17,7 @@ import json
 
 
 SMOKE_JOBS = ("sched", "sim_scale", "preempt", "backfill", "faults",
-              "net_topo")
+              "net_topo", "telemetry")
 
 
 def main() -> None:
@@ -35,12 +35,14 @@ def main() -> None:
     csv_rows = []
     from benchmarks import (backfill, exp1_single_type, exp2_mixed,
                             exp3_frameworks, faults, net_topo, preempt,
-                            roofline, sched_efficiency, sim_scale)
+                            roofline, sched_efficiency, sim_scale,
+                            telemetry)
     jobs = {"exp1": exp1_single_type.run, "exp2": exp2_mixed.run,
             "exp3": exp3_frameworks.run, "sched": sched_efficiency.run,
             "backfill": backfill.run, "preempt": preempt.run,
             "faults": faults.run, "net_topo": net_topo.run,
-            "roofline": roofline.run, "sim_scale": sim_scale.run}
+            "roofline": roofline.run, "sim_scale": sim_scale.run,
+            "telemetry": telemetry.run}
     for name, fn in jobs.items():
         if args.only and args.only != name:
             continue

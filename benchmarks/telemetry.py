@@ -1,0 +1,135 @@
+"""Telemetry-layer benchmark: overhead when off, insight when on.
+
+Drives the recovery-complete fault+preemption scenario (FLEET_RECOVERY:
+priority queue with gang preemption, stochastic node/domain/link faults,
+elastic regrowth, topology layer on) through three runs of the same
+trace:
+
+* **off**      — ``Scenario.telemetry=None``: the gating contract says
+                 this run is the pre-telemetry engine (every hook a
+                 single attribute check);
+* **trace**    — structured trace stream only (ring sink, no sampling);
+* **full**     — trace + sim-time gauge sampling + estimator audit, then
+                 the Chrome ``trace_event`` export.
+
+The JSON row embeds the full run's ``Telemetry.metrics_summary()`` —
+fleet utilization, queue depth, reserved-overlay slots, estimator
+calibration error per roofline class, the complete counter registry —
+which is the ISSUE's acceptance artifact: a fault+preemption benchmark
+row carrying the metrics summary in ``BENCH_*.json``.
+
+  python -m benchmarks.telemetry [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from benchmarks.faults import CKPT_INTERVAL, ELASTIC_FRAC, recovery_fleet
+from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
+from repro.core.simulator import Simulator
+from repro.core.telemetry import TelemetryConfig
+
+FULL = {"pods": 2, "hosts_per_pod": 16, "jobs": 160, "interval": 100.0}
+SMOKE = {"pods": 2, "hosts_per_pod": 8, "jobs": 60, "interval": 100.0}
+
+
+def run_once(cfg: dict, telemetry) -> tuple:
+    cluster = recovery_fleet(cfg["pods"], cfg["hosts_per_pod"])
+    subs = poisson_heavy_traffic(cfg["jobs"], cluster.total_slots, seed=2,
+                                 elastic_frac=ELASTIC_FRAC)
+    subs = [(dataclasses.replace(w, priority=i % 3), t)
+            for i, (w, t) in enumerate(subs)]
+    scn = dataclasses.replace(SCENARIOS["FLEET_RECOVERY"],
+                              name="FLEET_RECOVERY_TELEM",
+                              ckpt_interval=CKPT_INTERVAL,
+                              telemetry=telemetry)
+    sim = Simulator(cluster, scn, seed=2)
+    t0 = time.perf_counter()
+    done = sim.run(subs)
+    wall = time.perf_counter() - t0
+    return sim, done, wall
+
+
+def run(csv_rows=None, smoke: bool = False, out_path: str = None) -> dict:
+    cfg = SMOKE if smoke else FULL
+    if out_path is None:
+        out_path = ("BENCH_telemetry_smoke.json" if smoke
+                    else "BENCH_telemetry.json")
+    n_hosts = cfg["pods"] * cfg["hosts_per_pod"]
+    print("\n== Telemetry layer: per-event overhead + metrics summary ==")
+    print(f"   FLEET_RECOVERY (faults + preemption + topology), "
+          f"{n_hosts} hosts x 4 slots, {cfg['jobs']} jobs")
+    arms = [
+        ("off", None),
+        ("trace", TelemetryConfig(metrics_interval=None, audit=False)),
+        ("full", TelemetryConfig(metrics_interval=cfg["interval"])),
+    ]
+    run_once(cfg, None)          # warm-up: don't charge it to the first arm
+    rows, walls, sims = {}, {}, {}
+    for arm, tcfg in arms:
+        sim, done, wall = run_once(cfg, tcfg)
+        walls[arm], sims[arm] = wall, sim
+        us = 1e6 * wall / max(1, sim.n_events)
+        rows[arm] = {"wall_s": round(wall, 3), "events": sim.n_events,
+                     "us_per_event": round(us, 1),
+                     "completed": len(done), "failed": len(sim.failed)}
+        extra = ""
+        if tcfg is not None:
+            tel = sim.telemetry
+            rows[arm]["n_records"] = tel.sink.n_emitted
+            rows[arm]["n_samples"] = len(tel.samples)
+            extra = (f" records={tel.sink.n_emitted}"
+                     f" samples={len(tel.samples)}")
+        print(f"  {arm:6s} wall={wall:7.3f}s "
+              f"us/event={rows[arm]['us_per_event']:7.1f}{extra}")
+        if csv_rows is not None:
+            csv_rows.append((f"telemetry_{arm}",
+                             rows[arm]["us_per_event"],
+                             f"events={sim.n_events}"))
+    # identical simulated outcomes across arms (telemetry never perturbs)
+    base = rows["off"]
+    neutral = all(rows[a]["completed"] == base["completed"]
+                  and rows[a]["failed"] == base["failed"]
+                  and rows[a]["events"] == base["events"]
+                  for a, _ in arms)
+    overhead = {a: round(100.0 * (walls[a] / walls["off"] - 1.0), 1)
+                for a, _ in arms[1:]}
+    tel = sims["full"].telemetry
+    summary = tel.metrics_summary()
+    trace = tel.chrome_trace()
+    n_chrome = len(json.loads(json.dumps(trace))["traceEvents"])
+    print(f"  overhead: trace={overhead['trace']:+.1f}% "
+          f"full={overhead['full']:+.1f}% "
+          f"(wall-clock, sim outcomes identical={neutral})")
+    print(f"  chrome trace: {n_chrome} events; "
+          f"util mean={summary['utilization']['mean']:.3f} "
+          f"queue mean={summary['queue_depth']['mean']:.1f}")
+    payload = {"smoke": smoke, "config": cfg, "rows": rows,
+               "overhead_pct": overhead,
+               "chrome_events": n_chrome,
+               "metrics_summary": summary,
+               "acceptance": {"outcomes_identical": neutral,
+                              "summary_embedded": all(
+                                  k in summary for k in
+                                  ("utilization", "queue_depth",
+                                   "calibration", "counters")),
+                              "ok": neutral}}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

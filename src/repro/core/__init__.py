@@ -113,6 +113,28 @@ with no knowledge of why they were shaped that way:
   removes the subsystem entirely — every hook is gated on it, keeping
   fault-free traces byte-identical.
 
+**Observability layer** — watches both layers without perturbing either:
+
+* ``telemetry`` — the fleet telemetry layer (``Scenario.telemetry``,
+  default ``None`` = off).  A structured trace stream (typed
+  ``submit / admit / start / finish / preempt / checkpoint / shrink /
+  regrow / fault / link_health / reservation`` records emitted from the
+  engine's *shared* code paths into a pluggable
+  :class:`~repro.core.telemetry.TraceSink`), the counter registry that
+  *is* ``Simulator.perf`` (:data:`~repro.core.telemetry.COUNTERS`
+  documents every counter; ``new_perf_counters`` builds the dict the
+  simulator mutates, so existing ``sim.perf`` reads are read-through
+  aliases), sim-time sampled gauges (utilization, per-tenant queue
+  depth, reserved-overlay slots, link saturation, node lifecycle
+  census), Chrome ``trace_event`` timeline export and an
+  estimator-calibration audit.  **Gating contract**: every hook in
+  ``simulator`` / ``queues`` / ``faults`` / ``topology`` / ``policies``
+  is a single ``is not None`` check when the layer is off — no record
+  is built, no RNG stream is touched, every golden trace hash stays
+  byte-identical.  Because both event loops route lifecycle transitions
+  through the same hooks, the stream doubles as a cross-loop
+  correctness oracle (``telemetry.diff_streams``).
+
 The stack composes freely — any queue discipline over any placement
 policy (``Scenario.queue`` x ``Scenario.placement``), dispatched without
 touching the event loop.  The layers meet only at the ``(Workload,
@@ -144,6 +166,10 @@ from repro.core.queues import (QUEUES, FairShareQueue, FifoQueue,
 from repro.core.scenarios import (SCENARIOS, TENANT_CLASSES, diurnal_poisson,
                                   get_scenario, poisson_heavy_traffic)
 from repro.core.simulator import PerfParams, Scenario, Simulator
+from repro.core.telemetry import (COUNTERS, RingSink, Telemetry,
+                                  TelemetryConfig, TraceRecord, TraceSink,
+                                  chrome_trace, describe_counters,
+                                  diff_streams, make_telemetry)
 from repro.core.topology import (NetworkTopology, TopologyConfig,
                                  make_topology)
 from repro.core import taskgroup
@@ -161,5 +187,8 @@ __all__ = ["Cluster", "Node", "fleet_cluster", "hetero_cluster",
            "QueueDiscipline", "FifoQueue", "PriorityQueue",
            "FairShareQueue", "make_queue", "SCENARIOS", "TENANT_CLASSES",
            "diurnal_poisson", "get_scenario", "poisson_heavy_traffic",
-           "PerfParams", "Scenario", "Simulator", "NetworkTopology",
+           "PerfParams", "Scenario", "Simulator", "COUNTERS",
+           "RingSink", "Telemetry", "TelemetryConfig", "TraceRecord",
+           "TraceSink", "chrome_trace", "describe_counters",
+           "diff_streams", "make_telemetry", "NetworkTopology",
            "TopologyConfig", "make_topology", "taskgroup"]

@@ -446,6 +446,13 @@ class FaultEngine:
             return mean
         return mean * (1.0 - j + 2.0 * j * self.rng.random())
 
+    def _emit(self, kind: str, uid: str = "", **data):
+        """Telemetry shorthand (gated: a single attribute check when the
+        layer is off — the RNG streams above must never see it)."""
+        tel = self.sim.telemetry
+        if tel is not None:
+            tel.emit(kind, self.sim.now, uid, **data)
+
     # ---------------- lifecycle transitions --------------------------------
     def _take_down(self, name: str, repair: Optional[float], dirty,
                    avoid: Optional[Set[str]] = None):
@@ -467,6 +474,8 @@ class FaultEngine:
         else:
             self.state[name] = DOWN
             self._schedule(sim.now + repair, _RECOVER, name)
+        self._emit("fault", node=name,
+                   event="dead" if repair is None else "down")
         sim._cap_ver += 1
         sim.policy.invalidate_reservation()
         if dirty is not None:
@@ -482,6 +491,7 @@ class FaultEngine:
             return                              # superseded (e.g. dead)
         sim.cluster.node(name).n_slots = self._orig_slots.pop(name)
         self.state.pop(name, None)
+        self._emit("fault", node=name, event="recover")
         sim._cap_ver += 1
         sim.policy.invalidate_reservation()
         if dirty is not None:
@@ -494,6 +504,8 @@ class FaultEngine:
         self.state[name] = DEGRADED
         self.degraded[name] = self.cfg.degrade_factor
         sim.perf["degrades"] += 1
+        self._emit("fault", node=name, event="degrade",
+                   factor=self.cfg.degrade_factor)
         self._schedule(sim.now + self.cfg.degrade_time, _DEGRADE_END, name)
         # no capacity change, but every finish prediction on the node
         # moved: cached reservation projections are stale (satellite of
@@ -507,6 +519,7 @@ class FaultEngine:
             return                              # superseded by an outage
         self.degraded.pop(name, None)
         self.state.pop(name, None)
+        self._emit("fault", node=name, event="degrade_end")
         self.sim.policy.invalidate_reservation()
         if dirty is not None:
             dirty.add(name)
@@ -520,6 +533,7 @@ class FaultEngine:
         self.state[name] = CORDONED
         self.cordoned[name] = deadline
         sim.perf["cordons"] += 1
+        self._emit("fault", node=name, event="cordon", deadline=deadline)
         self._schedule(deadline, _DRAIN, name)
         sim.policy.invalidate_reservation()
 
@@ -592,9 +606,12 @@ class FaultEngine:
         jr.retries += 1
         sim.perf["fault_kills"] += 1
         sim.perf["rework_s"] += rework * jr.gran.n_tasks
+        self._emit("fault", jr.uid, seq=jr._seq, node=node_name,
+                   event="kill", retry=jr.retries)
         if jr.retries > pol.max_retries:
             sim.failed.append(jr)
             sim.perf["fault_failed"] += 1
+            self._emit("fault", jr.uid, seq=jr._seq, event="exhausted")
             return
         if pol.blacklist:
             jr._avoid = (jr._avoid or set()) | avoid
@@ -671,6 +688,8 @@ class FaultEngine:
         jr.shrinks += 1
         sim.perf["shrinks"] += 1
         sim.perf["rework_s"] += rework * jr.gran.n_tasks
+        self._emit("shrink", jr.uid, seq=jr._seq, node=node_name,
+                   lost=lost_tasks, width=jr._width_factor)
         if self.pol.regrow:
             # remember the lost workers for the inverse operation and
             # register the growth claim; a claim already staged against
@@ -877,6 +896,10 @@ class FaultEngine:
         self._shrunken.pop(jr, None)
         sim.perf["regrows"] += 1
         sim.perf["rework_s"] += rework * jr.gran.n_tasks
+        self._emit("regrow", jr.uid, seq=jr._seq,
+                   nodes=tuple(sorted({w.node for w in new_workers})),
+                   wait=(sim.now - jr._shrunk_t
+                         if jr._shrunk_t is not None else 0.0))
         if jr._shrunk_t is not None:
             sim.perf["regrow_wait_s"] += sim.now - jr._shrunk_t
             jr._shrunk_t = None

@@ -147,7 +147,12 @@ class PlacementPolicy:
         if jr.start_t is None:
             jr.start_t = self.sim.now
         self.on_dequeue(jr)
-        self.sim._on_start(jr, dirty_nodes)
+        sim = self.sim
+        if sim.telemetry is not None:
+            sim.telemetry.emit("admit", sim.now, jr.uid, seq=jr._seq,
+                               wait=sim.now - jr._queued_t,
+                               workers=len(placed))
+        sim._on_start(jr, dirty_nodes)
 
     # -- admission --------------------------------------------------------
     def admit(self, dirty_nodes: Optional[set], use_index: bool = True):
@@ -548,6 +553,13 @@ class EasyBackfillPolicy(PlacementPolicy):
         self._resv = (head, sim._cap_ver, shadow, extra, shadow_node,
                       shadow_slack)
         sim.perf["reserve_s"] += time.perf_counter() - t_resv
+        if sim.telemetry is not None:
+            # an unschedulable head projects shadow=inf: export as None
+            # so the record stream stays JSON-safe
+            sim.telemetry.emit(
+                "reservation", sim.now, head.uid, seq=head._seq,
+                shadow=shadow if shadow != float("inf") else None,
+                extra=extra, node=shadow_node)
         return shadow, extra, shadow_node, shadow_slack
 
     # slack-window backfills allowed (EASY).  The conservative variant

@@ -179,6 +179,9 @@ class QueueDiscipline:
         jr.wasted_work += wasted
         sim.perf["preemptions"] += 1
         sim.perf["preempt_wasted_s"] += wasted * jr.gran.n_tasks
+        if sim.telemetry is not None:
+            sim.telemetry.emit("preempt", sim.now, jr.uid, seq=jr._seq,
+                               wasted=wasted)
         self.on_requeue(jr)
         sim.policy.on_enqueue(jr)
 

@@ -70,6 +70,7 @@ from repro.core.planner import Granularity, select_granularity
 from repro.core.profiles import MEM_WEIGHT as _MEM_WEIGHT
 from repro.core.profiles import Profile, Workload
 from repro.core import taskgroup as TG
+from repro.core import telemetry as TEL
 from repro.core import topology as TPO
 
 
@@ -145,6 +146,13 @@ class Scenario:
     # default) = layer off — every hook is skipped and traces stay
     # byte-identical to the flat model
     topology: Optional[TPO.TopologyConfig] = None
+    # telemetry layer (repro.core.telemetry): structured trace stream,
+    # sim-time metrics sampling, Chrome-trace / metrics-summary exporters
+    # and the estimator-accuracy audit.  None (the default) = layer off —
+    # every hook is a single attribute check, no record is built and no
+    # RNG stream is touched, so traces stay byte-identical; with a config
+    # present telemetry *observes* only (never perturbs scheduling)
+    telemetry: Optional[TEL.TelemetryConfig] = None
 
 
 @dataclasses.dataclass(eq=False)         # identity hash: JobRuns live in the
@@ -253,32 +261,12 @@ class Simulator:
         # monotone floor over every speed ever assigned (speeds are <= 1);
         # bounds the completion-scan window in the event loop
         self._speed_floor = 1.0
-        # per-phase counters: wall time in the heap/event phase, admission
-        # and speed refresh (reserve_s is the EASY-reservation slice
-        # *nested inside* admit_s), plus exact attempt counts.
-        # admit_calls == events, except a run ending in the unschedulable
-        # deadlock break (its final scan holds no admission pass)
-        self.perf: Dict[str, float] = {
-            "events": 0, "admit_calls": 0, "place_attempts": 0,
-            "reservations": 0, "preemptions": 0, "preempt_wasted_s": 0.0,
-            "heap_s": 0.0, "admit_s": 0.0,
-            "refresh_s": 0.0, "reserve_s": 0.0, "wall_s": 0.0,
-            # fault-engine counters (all zero with the injector off)
-            "node_faults": 0, "domain_faults": 0, "degrades": 0,
-            "cordons": 0, "drains": 0, "fault_kills": 0, "retries": 0,
-            "fault_failed": 0, "shrinks": 0, "rework_s": 0.0,
-            # recovery counters: link-scoped fault lifecycle, elastic
-            # regrowth (count + cumulative shrink->full-width wait), and
-            # the priority queue's resume-reservation claims
-            "link_downs": 0, "link_degrades": 0, "link_repairs": 0,
-            "regrows": 0, "regrow_wait_s": 0.0,
-            "resume_holds": 0, "resume_releases": 0,
-            # topology-layer counters (all zero with the layer off):
-            # link-traffic registrations/releases, gangs placed through
-            # the switch-packed argmax, and the registry's wall-time
-            # slice (nested inside admit_s / heap_s)
-            "topo_registers": 0, "topo_releases": 0,
-            "topo_packed_places": 0, "topo_s": 0.0}
+        # per-phase counters: the telemetry module's counter registry is
+        # the single documented home of every counter
+        # (``telemetry.COUNTERS`` — meanings, ``telemetry
+        # .describe_counters()``); this dict is its per-run store, so
+        # existing ``sim.perf`` reads and writes are read-through aliases
+        self.perf: Dict[str, float] = TEL.new_perf_counters()
         # per-node memory bandwidth: None when the fleet is homogeneous
         # (the scalar PerfParams path — zero per-event overhead); else a
         # name -> tasks-at-full-speed map defaulting to the scenario value
@@ -297,6 +285,8 @@ class Simulator:
         #                                          # window, victim costing)
         self.faults = FLT.make_faults(self)    # fault injector + resilience
         #                                      # (None = injector off)
+        self.telemetry = TEL.make_telemetry(self)  # observability layer
+        #                                          # (None = layer off)
 
     # ---------------- submission -----------------------------------------
     def submit(self, job: Workload, t: float):
@@ -325,6 +315,11 @@ class Simulator:
             self.faults.on_submit(jr)      # Young/Daly ckpt-interval stamp
         self.discipline.on_submit(jr)
         self.policy.on_enqueue(jr)
+        if self.telemetry is not None:
+            self.telemetry.emit("submit", t, jr.uid, seq=jr._seq,
+                                name=job.name, profile=job.profile.name,
+                                tasks=jr.gran.n_tasks, tenant=jr.tenant,
+                                priority=jr.priority)
 
     # ---------------- admission (discipline + policy dispatch) -------------
     def _try_admit(self, dirty_nodes: Optional[set] = None,
@@ -382,6 +377,8 @@ class Simulator:
         self.discipline.on_start(jr)
         if self.faults is not None:
             self.faults.on_start(jr)       # clears the attempt's blacklist
+        if self.telemetry is not None:
+            self.telemetry.on_start(jr)    # start record + audit bookmark
         if dirty_nodes is not None:
             dirty_nodes.update(nodes)
 
@@ -597,6 +594,7 @@ class Simulator:
         pc = time.perf_counter
         t_run = pc()
         flt = self.faults
+        tel = self.telemetry
         idx = 0
         while idx < len(pending) or self.queue or self.running \
                 or (flt is not None and flt.work_pending()):
@@ -644,6 +642,8 @@ class Simulator:
                 jr.remaining = 0.0
                 self.done.append(jr)
                 self._on_stop(jr, dirty)
+                if tel is not None:
+                    tel.on_finish(jr)
             for entry in requeue:
                 heapq.heappush(heap, entry)
             # node failures / recoveries (time-ordered heap: a recovery
@@ -667,6 +667,8 @@ class Simulator:
             perf["heap_s"] += t1 - t0
             perf["admit_s"] += t2 - t1
             perf["refresh_s"] += t3 - t2
+            if tel is not None:
+                tel.maybe_sample()
         perf["wall_s"] += pc() - t_run
         perf["events"] = self.n_events
         return self.done
@@ -682,6 +684,7 @@ class Simulator:
         pc = time.perf_counter
         t_run = pc()
         flt = self.faults
+        tel = self.telemetry
         idx = 0
         while idx < len(pending) or self.queue or self.running \
                 or (flt is not None and flt.work_pending()):
@@ -716,6 +719,8 @@ class Simulator:
                 jr.finish_t = self.now
                 self.done.append(jr)
                 self._on_stop(jr, None)
+                if tel is not None:
+                    tel.on_finish(jr)
             # node failures / recoveries
             while fails and fails[0][0] <= self.now + 1e-12:
                 _, node_name, down_for = heapq.heappop(fails)
@@ -734,6 +739,8 @@ class Simulator:
             perf["heap_s"] += t1 - t0
             perf["admit_s"] += t2 - t1
             perf["refresh_s"] += t3 - t2
+            if tel is not None:
+                tel.maybe_sample()
         perf["wall_s"] += pc() - t_run
         perf["events"] = self.n_events
         return self.done
@@ -748,7 +755,13 @@ class Simulator:
         ck = self.sc.ckpt_interval
         if jr is not None and jr.ckpt_interval is not None:
             ck = jr.ckpt_interval
-        return (done_work // ck) * ck if ck > 0 else 0.0
+        saved = (done_work // ck) * ck if ck > 0 else 0.0
+        if jr is not None and self.telemetry is not None:
+            # every caller is a real teardown/regrow at the current event
+            # time (victim *costing* quantizes inline, not through here)
+            self.telemetry.emit("checkpoint", self.now, jr.uid,
+                                seq=jr._seq, saved=saved)
+        return saved
 
     # ---------------- fault handling ---------------------------------------
     def _fail_node(self, node_name: str, down_for: float, fails,
@@ -761,6 +774,9 @@ class Simulator:
         if down_for < 0:                        # recovery
             node.n_slots = -int(down_for)
             self._cap_ver += 1
+            if self.telemetry is not None:
+                self.telemetry.emit("fault", self.now, "",
+                                    node=node_name, event="recover")
             return
         if node.n_slots == 0:
             # the node is already down: nothing to kill, and its pending
@@ -783,12 +799,19 @@ class Simulator:
             jr.workers = []
             self.discipline.on_requeue(jr)      # FIFO: resumes at the head
             self.policy.on_enqueue(jr)
+            if self.telemetry is not None:
+                self.telemetry.emit("fault", self.now, jr.uid,
+                                    seq=jr._seq, node=node_name,
+                                    event="kill")
         self.preempted = getattr(self, "preempted", 0) + len(victims)
         # take the node down; schedule its recovery as a pseudo-failure
         heapq.heappush(fails, (self.now + down_for, node_name,
                                -float(node.n_slots)))
         node.n_slots = 0
         self._cap_ver += 1
+        if self.telemetry is not None:
+            self.telemetry.emit("fault", self.now, "", node=node_name,
+                                event="down", until=self.now + down_for)
         # a cached backfill reservation projected onto this node (or onto
         # its victims' finish times) is stale — drop it so the shadow
         # window is recomputed from the post-failure finish heap

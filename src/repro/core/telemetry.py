@@ -1,0 +1,597 @@
+"""Fleet telemetry: structured tracing, sim-time metrics, timelines.
+
+The observability layer for the whole scheduling stack.  Three concerns,
+all gated on ``Scenario.telemetry`` (``None`` = layer off — every hook in
+``simulator`` / ``queues`` / ``faults`` / ``topology`` / ``policies`` is a
+single attribute check, no record is built, no RNG stream is touched, so
+every golden trace hash stays byte-identical):
+
+* **Structured trace stream** — typed records
+  (``submit / admit / start / finish / preempt / checkpoint / shrink /
+  regrow / fault / link_health / reservation``) emitted from the engine's
+  *shared* code paths into a pluggable :class:`TraceSink` (in-memory ring
+  buffer by default).  Because both event loops (heap and legacy) route
+  every lifecycle transition through the same hooks, the stream is a
+  cross-loop correctness oracle: same scenario × seed ⇒ byte-identical
+  streams on repeat runs of one loop, and *equivalent* streams across
+  ``run()`` vs ``run(legacy=True)`` — identical per-entity event
+  sequences with timestamps/float payloads matching to the engine's
+  documented loop-equivalence FP tolerance (:func:`diff_streams`,
+  ``tests/test_telemetry.py``).
+
+* **Simulated-time metrics** — the counter registry (the single home of
+  every ``Simulator.perf`` counter: :data:`COUNTERS` documents each one,
+  :func:`new_perf_counters` builds the dict the simulator mutates — the
+  old ``sim.perf`` reads are untouched read-through aliases) plus sampled
+  gauges (fleet utilization, per-tenant queue depth, reserved-overlay
+  slots, per-level link saturation, nodes by lifecycle state, preemption
+  waste) collected on a configurable *sim-time* cadence
+  (``TelemetryConfig.metrics_interval``); no per-event work when the
+  cadence is unset.
+
+* **Exporters** — :meth:`Telemetry.chrome_trace` renders Chrome
+  ``trace_event`` JSON (per-job and per-node lanes with queued → running
+  → preempted → shrunk/regrowing spans, checkpoint/fault instants;
+  loadable in Perfetto / ``chrome://tracing``), and
+  :meth:`Telemetry.metrics_summary` returns the JSON-safe dict benchmark
+  rows embed in ``BENCH_*.json``.
+
+* **Estimator audit** — every finish pairs the run's
+  ``JobRun.predicted_finish_t`` with the actual finish;
+  :meth:`Telemetry.calibration` reports relative-error percentiles per
+  roofline class (the accuracy signal behind the backfill window and
+  victim costing).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+# --------------------------------------------------------------------------
+# counter registry: the single documented home of every Simulator.perf
+# counter.  The simulator constructs its ``perf`` dict from this spec, so
+# ``sim.perf`` *is* the metrics registry's counter store — existing reads
+# (benchmarks/sim_scale.py, tier-1 assertions) are read-through aliases.
+# --------------------------------------------------------------------------
+COUNTERS: "collections.OrderedDict[str, tuple]" = collections.OrderedDict([
+    # event-loop phases (wall-clock seconds; reserve_s/topo_s are nested
+    # slices inside admit_s / heap_s, so phases don't sum to wall_s)
+    ("events",          (0,   "event-loop iterations")),
+    ("admit_calls",     (0,   "admission passes (== events, except a run "
+                              "ending in the unschedulable deadlock break)")),
+    ("place_attempts",  (0,   "gang placement attempts (binder invocations)")),
+    ("reservations",    (0,   "EASY/conservative shadow-window recomputes "
+                              "(cache misses keyed on capacity version)")),
+    ("preemptions",     (0,   "gangs killed-and-requeued by the discipline")),
+    ("preempt_wasted_s", (0.0, "work-seconds × gang width lost to "
+                               "preemption (past the last checkpoint)")),
+    ("heap_s",          (0.0, "wall time in the event/heap phase")),
+    ("admit_s",         (0.0, "wall time in admission")),
+    ("refresh_s",       (0.0, "wall time in the speed refresh")),
+    ("reserve_s",       (0.0, "wall time projecting backfill reservations "
+                              "(nested inside admit_s)")),
+    ("wall_s",          (0.0, "total wall time inside run()")),
+    # fault-engine counters (all zero with the injector off)
+    ("node_faults",     (0,   "stochastic node-fault draws that fired")),
+    ("domain_faults",   (0,   "correlated whole-domain (pod) failures")),
+    ("degrades",        (0,   "nodes entering the degraded state")),
+    ("cordons",         (0,   "nodes cordoned for maintenance draining")),
+    ("drains",          (0,   "drain grace windows that expired into an "
+                              "outage")),
+    ("fault_kills",     (0,   "gangs torn down by a node fault")),
+    ("retries",         (0,   "fault-killed gangs granted a retry")),
+    ("fault_failed",    (0,   "gangs that exhausted their retry budget")),
+    ("shrinks",         (0,   "elastic gangs that dropped a node's workers "
+                              "instead of dying")),
+    ("rework_s",        (0.0, "work-seconds × gang width recomputed after "
+                              "fault kills/shrinks/regrows")),
+    # recovery counters: link-scoped fault lifecycle, elastic regrowth,
+    # and the priority queue's resume-reservation claims
+    ("link_downs",      (0,   "fabric links dropped to the residual floor")),
+    ("link_degrades",   (0,   "fabric links degraded (partial bandwidth)")),
+    ("link_repairs",    (0,   "link health restorations")),
+    ("regrows",         (0,   "shrunken gangs re-expanded to full width")),
+    ("regrow_wait_s",   (0.0, "cumulative first-shrink → full-width wait")),
+    ("resume_holds",    (0,   "resume-reservation claims staked for "
+                              "preemption victims")),
+    ("resume_releases", (0,   "resume claims released by the victim's "
+                              "restart")),
+    # topology-layer counters (all zero with the layer off)
+    ("topo_registers",  (0,   "gang link-traffic registrations")),
+    ("topo_releases",   (0,   "gang link-traffic releases")),
+    ("topo_packed_places", (0, "gangs placed through the switch-packed "
+                               "argmax")),
+    ("topo_s",          (0.0, "wall time in the traffic registry (nested "
+                              "inside admit_s / heap_s)")),
+])
+
+
+def new_perf_counters() -> Dict[str, float]:
+    """Fresh counter store for one ``Simulator`` — every registered
+    counter at its zero, in registry order."""
+    return {name: default for name, (default, _) in COUNTERS.items()}
+
+
+def describe_counters() -> Dict[str, str]:
+    """``{counter name: meaning}`` — the documentation surface."""
+    return {name: doc for name, (_, doc) in COUNTERS.items()}
+
+
+# --------------------------------------------------------------------------
+# trace records
+# --------------------------------------------------------------------------
+# canonical kind order: within one timestamp a submit sorts before the
+# admit/start it enables, starts before teardowns of the same instant,
+# lifecycle/fabric/reservation records last — any *loop-specific*
+# processing order at equal time collapses to one canonical stream.
+KINDS: Tuple[str, ...] = ("submit", "admit", "start", "finish", "preempt",
+                          "checkpoint", "shrink", "regrow", "fault",
+                          "link_health", "reservation")
+_KIND_RANK = {k: i for i, k in enumerate(KINDS)}
+
+# record kinds that tear down a *running* gang (close its running span):
+# a ``fault`` record is a teardown exactly when it carries a job uid with
+# ``event == "kill"`` (node-scoped lifecycle records carry no uid)
+TEARDOWN_KINDS = ("finish", "preempt", "fault")
+
+
+class TraceRecord(NamedTuple):
+    """One typed trace event.  ``data`` is a tuple of sorted ``(key,
+    value)`` pairs — deterministic ``repr`` for byte-exact stream
+    comparison; ``dict(rec.data)`` recovers the mapping."""
+    t: float
+    kind: str
+    uid: str
+    data: tuple
+
+    def get(self, key, default=None):
+        for k, v in self.data:
+            if k == key:
+                return v
+        return default
+
+
+def canonical_key(rec: TraceRecord):
+    return (rec.t, _KIND_RANK.get(rec.kind, len(KINDS)), rec.uid,
+            repr(rec.data))
+
+
+# --------------------------------------------------------------------------
+# sinks
+# --------------------------------------------------------------------------
+class TraceSink:
+    """Receives every :class:`TraceRecord`.  Subclass to stream records
+    elsewhere (file, socket, OTLP bridge); attach via
+    ``Telemetry.attach_sink`` or register in :data:`SINKS`."""
+
+    def emit(self, rec: TraceRecord) -> None:
+        raise NotImplementedError
+
+    def records(self) -> List[TraceRecord]:
+        """Retained records, emission order (may be a suffix if bounded)."""
+        return []
+
+
+class RingSink(TraceSink):
+    """In-memory ring buffer (the default): keeps the newest ``maxlen``
+    records, counts everything ever emitted so consumers can detect
+    drops (``n_emitted > len(records())``)."""
+
+    def __init__(self, maxlen: Optional[int] = None):
+        self.buf: "collections.deque[TraceRecord]" = \
+            collections.deque(maxlen=maxlen)
+        self.n_emitted = 0
+
+    def emit(self, rec: TraceRecord) -> None:
+        self.n_emitted += 1
+        self.buf.append(rec)
+
+    def records(self) -> List[TraceRecord]:
+        return list(self.buf)
+
+
+SINKS = {"ring": RingSink}
+
+
+# --------------------------------------------------------------------------
+# configuration + constructor (the make_faults / make_topology pattern)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """``Scenario.telemetry``.  ``None`` (the scenario default) removes
+    the layer entirely; with a config present, telemetry *observes* —
+    it must never perturb scheduling, RNG streams or float state."""
+    trace: bool = True                    # emit the structured stream
+    sink: str = "ring"                    # SINKS key
+    ring_size: Optional[int] = None       # ring bound (None = unbounded)
+    metrics_interval: Optional[float] = None  # sim-seconds between gauge
+    #                                         # samples (None = gauges off)
+    audit: bool = True                    # estimator-accuracy audit
+
+
+def make_telemetry(sim) -> Optional["Telemetry"]:
+    cfg = sim.sc.telemetry
+    if cfg is None:
+        return None
+    return Telemetry(sim, cfg)
+
+
+class Telemetry:
+    """Per-simulator telemetry engine: record emission, gauge sampling,
+    the estimator audit, and the exporters."""
+
+    def __init__(self, sim, cfg: TelemetryConfig):
+        self.sim = sim
+        self.cfg = cfg
+        self.sink: TraceSink = SINKS[cfg.sink](cfg.ring_size) \
+            if cfg.sink == "ring" else SINKS[cfg.sink]()
+        self._trace = cfg.trace
+        self.samples: List[dict] = []         # gauge snapshots (dicts)
+        self._next_sample = 0.0
+        # estimator audit: (roofline class, relative error, absolute error)
+        self.audit: List[tuple] = []
+        self._last_start: Dict[object, float] = {}   # jr -> last (re)start
+
+    def attach_sink(self, sink: TraceSink) -> None:
+        self.sink = sink
+
+    # ---------------- emission ------------------------------------------
+    def emit(self, kind: str, t: float, uid: str = "", **data) -> None:
+        if self._trace:
+            self.sink.emit(TraceRecord(t, kind, uid,
+                                       tuple(sorted(data.items()))))
+
+    def on_start(self, jr) -> None:
+        """``Simulator._on_start`` hook: start record + audit bookmark."""
+        now = self.sim.now
+        if self.cfg.audit:
+            self._last_start[jr] = now
+        if self._trace:
+            nodes = tuple(sorted(jr.nodes_used.items()))
+            self.sink.emit(TraceRecord(
+                now, "start", jr.uid,
+                (("nodes", nodes),
+                 ("predicted", _finite(jr.predicted_finish_t)),
+                 ("seq", jr._seq))))
+
+    def on_finish(self, jr) -> None:
+        """Completion hook (both event loops): finish record + the
+        predicted-vs-actual audit entry."""
+        now = self.sim.now
+        self.emit("finish", now, jr.uid, seq=jr._seq)
+        if self.cfg.audit:
+            start = self._last_start.pop(jr, None)
+            pred = jr.predicted_finish_t
+            if start is not None and pred is not None \
+                    and math.isfinite(pred):
+                actual = max(now - start, 1e-12)
+                err = abs(pred - now)
+                self.audit.append((jr.job.profile.name, err / actual, err))
+
+    # ---------------- gauges (sim-time cadence) -------------------------
+    def maybe_sample(self) -> None:
+        """Called once per event-loop iteration (only when the layer is
+        on); takes one gauge snapshot per crossed cadence boundary —
+        state is piecewise-constant between events, so one snapshot at
+        the event time represents the whole gap."""
+        iv = self.cfg.metrics_interval
+        if iv is None or iv <= 0:
+            return
+        if self.sim.now >= self._next_sample:
+            self._sample()
+            self._next_sample = self.sim.now + iv
+
+    def _sample(self) -> None:
+        sim = self.sim
+        cluster = sim.cluster
+        total = cluster.total_slots
+        free = cluster.free_slots
+        s = {"t": sim.now,
+             "util": (1.0 - free / total) if total else 0.0,
+             "running": len(sim.running),
+             "queue_depth": len(sim.queue),
+             "preempt_wasted_s": sim.perf["preempt_wasted_s"],
+             "rework_s": sim.perf["rework_s"]}
+        by_tenant: Dict[str, int] = {}
+        for jr in sim.queue:
+            by_tenant[jr.tenant] = by_tenant.get(jr.tenant, 0) + 1
+        s["queue_by_tenant"] = by_tenant
+        # reserved-overlay slots: capacity withheld from general admission
+        # by the two overlay writers plus cordoned (draining) free slots
+        reserved = 0
+        for v in sim.discipline.claimed_slots().values():
+            reserved += v
+        flt = sim.faults
+        if flt is not None:
+            for hold in flt._regrow_hold.values():
+                for v in hold.values():
+                    reserved += v
+            reserved += flt.cordoned_free()
+            by_state: Dict[str, int] = {}
+            for st in flt.state.values():
+                by_state[st] = by_state.get(st, 0) + 1
+            by_state["healthy"] = len(cluster.nodes) - len(flt.state)
+            s["nodes_by_state"] = by_state
+        s["reserved_slots"] = reserved
+        topo = sim.topo
+        if topo is not None:
+            lt = topo.cfg.link_tasks
+            sat: Dict[str, float] = {}
+            for key, amt in topo.traffic.items():
+                if not amt:
+                    continue
+                bw = topo.bw[key[0]]
+                h = topo.link_health.get(key)
+                if h is not None:
+                    bw *= h
+                level = key[0]
+                x = amt / (bw * lt) if bw > 0 else float("inf")
+                if x > sat.get(level, 0.0):
+                    sat[level] = x
+            s["link_saturation"] = {k: _finite(v) for k, v in sat.items()}
+        self.samples.append(s)
+
+    # ---------------- stream access -------------------------------------
+    def records(self) -> List[TraceRecord]:
+        return self.sink.records()
+
+    def canonical_records(self) -> List[TraceRecord]:
+        """The loop-invariant stream: records sorted by (time, kind rank,
+        uid, payload).  ``repr()`` of this list is the byte-exact
+        cross-loop equivalence oracle."""
+        return sorted(self.sink.records(), key=canonical_key)
+
+    # ---------------- estimator-accuracy audit --------------------------
+    def calibration(self) -> Dict[str, dict]:
+        """Per-roofline-class calibration of ``predicted_finish_t``:
+        ``{class: {n, mean, p50, p90, max}}`` over relative errors
+        (|predicted − actual finish| / final-attempt runtime)."""
+        by_cls: Dict[str, List[float]] = {}
+        for cls, rel, _ in self.audit:
+            by_cls.setdefault(cls, []).append(rel)
+        out: Dict[str, dict] = {}
+        for cls, errs in sorted(by_cls.items()):
+            errs.sort()
+            out[cls] = {"n": len(errs),
+                        "mean": sum(errs) / len(errs),
+                        "p50": _pctl(errs, 0.50),
+                        "p90": _pctl(errs, 0.90),
+                        "max": errs[-1]}
+        return out
+
+    # ---------------- exporters -----------------------------------------
+    def metrics_summary(self) -> dict:
+        """JSON-safe summary a benchmark row embeds in ``BENCH_*.json``:
+        sampled-gauge aggregates, the counter registry, calibration."""
+        out: dict = {"n_records": getattr(self.sink, "n_emitted",
+                                          len(self.sink.records())),
+                     "n_samples": len(self.samples)}
+        if self.samples:
+            utils = [s["util"] for s in self.samples]
+            depths = [s["queue_depth"] for s in self.samples]
+            out["utilization"] = {"mean": sum(utils) / len(utils),
+                                  "max": max(utils)}
+            out["queue_depth"] = {"mean": sum(depths) / len(depths),
+                                  "max": max(depths)}
+            reserved = [s.get("reserved_slots", 0) for s in self.samples]
+            out["reserved_slots"] = {"mean": sum(reserved) / len(reserved),
+                                     "max": max(reserved)}
+        if self.audit:
+            out["calibration"] = self.calibration()
+        perf = self.sim.perf
+        out["counters"] = {k: perf[k] for k in COUNTERS}
+        elapsed = self.sim.now
+        if elapsed > 0:
+            out["preempt_waste_rate"] = perf["preempt_wasted_s"] / elapsed
+            out["rework_rate"] = perf["rework_s"] / elapsed
+        return out
+
+    def chrome_trace(self) -> dict:
+        return chrome_trace(self.records())
+
+
+# --------------------------------------------------------------------------
+# Chrome trace_event exporter (Perfetto / chrome://tracing)
+# --------------------------------------------------------------------------
+_PID_JOBS, _PID_NODES, _PID_FABRIC = 1, 2, 3
+
+
+def chrome_trace(records: List[TraceRecord]) -> dict:
+    """Render a trace stream as Chrome ``trace_event`` JSON: per-job
+    lanes (pid 1) with queued → running → preempted/recovering spans and
+    nested shrunk-width spans, per-node lanes (pid 2) with one slice per
+    resident gang plus fault-lifecycle instants, and a fabric lane
+    (pid 3) with link-health instants.  Timestamps are sim-seconds
+    rendered as microseconds (``ts``/``dur``)."""
+    recs = sorted(records, key=canonical_key)
+    evs: List[dict] = []
+    tids: Dict[tuple, int] = {}          # (pid, label) -> tid
+
+    def tid(pid: int, label: str) -> int:
+        key = (pid, label)
+        t = tids.get(key)
+        if t is None:
+            t = tids[key] = len(tids) + 1
+            evs.append({"name": "thread_name", "ph": "M", "pid": pid,
+                        "tid": t, "args": {"name": label}})
+        return t
+
+    def span(pid, lane, name, t0, t1, args=None):
+        ev = {"name": name, "cat": "span", "ph": "X",
+              "ts": t0 * 1e6, "dur": max(t1 - t0, 0.0) * 1e6,
+              "pid": pid, "tid": tid(pid, lane)}
+        if args:
+            ev["args"] = args
+        evs.append(ev)
+
+    def instant(pid, lane, name, t, args=None):
+        ev = {"name": name, "cat": "event", "ph": "i", "s": "t",
+              "ts": t * 1e6, "pid": pid, "tid": tid(pid, lane)}
+        if args:
+            ev["args"] = args
+        evs.append(ev)
+
+    for pid, pname in ((_PID_JOBS, "jobs"), (_PID_NODES, "nodes"),
+                       (_PID_FABRIC, "fabric")):
+        evs.append({"name": "process_name", "ph": "M", "pid": pid,
+                    "args": {"name": pname}})
+
+    ready: Dict[tuple, tuple] = {}       # gang -> (since t, phase name)
+    run_open: Dict[tuple, float] = {}    # gang -> running-span start
+    node_open: Dict[tuple, float] = {}   # (gang, node) -> slice start
+    shrunk_open: Dict[tuple, float] = {} # gang -> shrunk-span start
+    lane_of: Dict[tuple, str] = {}       # gang -> job-lane label
+    t_end = recs[-1].t if recs else 0.0
+
+    def close_gang(gang, t, reason):
+        t0 = run_open.pop(gang, None)
+        if t0 is not None:
+            span(_PID_JOBS, lane_of[gang], "running", t0, t)
+        t0 = shrunk_open.pop(gang, None)
+        if t0 is not None:
+            span(_PID_JOBS, lane_of[gang], "shrunk", t0, t)
+        for key in [k for k in node_open if k[0] == gang]:
+            span(_PID_NODES, key[1], lane_of[gang], node_open.pop(key), t,
+                 args={"end": reason})
+
+    for r in recs:
+        d = dict(r.data)
+        gang = (r.uid, d.get("seq", -1))
+        if r.kind == "submit":
+            # one lane per *submission*: "name"-mode uids alias across
+            # concurrent same-name gangs, so the lane label embeds the
+            # submission seq unless the uid already carries it
+            seq = d.get("seq", -1)
+            lane_of[gang] = r.uid if seq < 0 or r.uid.endswith(f"#{seq}") \
+                else f"{r.uid}#{seq}"
+            ready[gang] = (r.t, "queued")
+        elif r.kind == "start":
+            lane_of.setdefault(gang, r.uid)
+            since = ready.pop(gang, None)
+            if since is not None and r.t > since[0]:
+                span(_PID_JOBS, lane_of[gang], since[1], since[0], r.t)
+            run_open[gang] = r.t
+            for node, tasks in d.get("nodes", ()):
+                node_open[(gang, node)] = r.t
+        elif r.kind == "finish":
+            close_gang(gang, r.t, "finish")
+        elif r.kind == "preempt":
+            close_gang(gang, r.t, "preempt")
+            ready[gang] = (r.t, "preempted")
+        elif r.kind == "fault" and r.uid:
+            close_gang(gang, r.t, "fault")
+            if d.get("event") == "kill":
+                ready[gang] = (r.t, "recovering")
+        elif r.kind == "fault":
+            instant(_PID_NODES, d.get("node", "?"), d.get("event", "fault"),
+                    r.t, args={k: v for k, v in d.items() if k != "node"})
+        elif r.kind == "checkpoint":
+            if gang in lane_of:
+                instant(_PID_JOBS, lane_of[gang], "checkpoint", r.t,
+                        args={"saved": d.get("saved")})
+        elif r.kind == "shrink":
+            t0 = node_open.pop((gang, d.get("node")), None)
+            if t0 is not None:
+                span(_PID_NODES, d["node"], lane_of.get(gang, r.uid),
+                     t0, r.t, args={"end": "shrink"})
+            shrunk_open.setdefault(gang, r.t)
+        elif r.kind == "regrow":
+            t0 = shrunk_open.pop(gang, None)
+            if t0 is not None:
+                span(_PID_JOBS, lane_of.get(gang, r.uid), "shrunk",
+                     t0, r.t, args={"end": "regrow"})
+            for node in d.get("nodes", ()):
+                node_open[(gang, node)] = r.t
+        elif r.kind == "link_health":
+            instant(_PID_FABRIC, str(d.get("link", "?")),
+                    "restored" if d.get("factor") is None else "degraded",
+                    r.t, args={"factor": d.get("factor")})
+    # jobs still running / shrunk / queued when the stream ends
+    for gang in list(run_open):
+        close_gang(gang, t_end, "open")
+    for gang, (t0, phase) in ready.items():
+        if gang in lane_of and t_end > t0:
+            span(_PID_JOBS, lane_of[gang], phase, t0, t_end)
+    return {"traceEvents": evs, "displayTimeUnit": "ms"}
+
+
+# --------------------------------------------------------------------------
+# cross-loop stream oracle
+# --------------------------------------------------------------------------
+def _stream_groups(records: List[TraceRecord]) -> Dict[tuple, list]:
+    """Group a stream by emitting entity, preserving per-entity emission
+    order: gang records (anything carrying a uid/seq) key on the gang,
+    node-lifecycle records on the node, link records on the link."""
+    groups: Dict[tuple, list] = {}
+    for r in records:
+        seq = r.get("seq")
+        if r.uid or seq is not None:
+            key = ("gang", r.uid, -1 if seq is None else seq)
+        elif r.kind == "link_health":
+            key = ("link", r.get("link", ""))
+        else:
+            key = ("node", r.get("node", ""))
+        groups.setdefault(key, []).append(r)
+    return groups
+
+
+def _close(x, y, rel: float, abs_tol: float) -> bool:
+    if isinstance(x, float) or isinstance(y, float):
+        if x is None or y is None:
+            return x == y
+        return math.isclose(float(x), float(y), rel_tol=rel,
+                            abs_tol=abs_tol)
+    return x == y
+
+
+def diff_streams(a: List[TraceRecord], b: List[TraceRecord],
+                 rel: float = 1e-9, abs_tol: float = 1e-6) -> Optional[str]:
+    """Cross-loop correctness oracle: ``None`` iff the two streams are
+    equivalent — identical per-entity event sequences (kinds, uids,
+    payload structure) with timestamps and float payloads equal to the
+    engine's documented loop-equivalence tolerance (the legacy loop
+    integrates progress with one subtraction per event, the heap loop
+    with one multiply per speed change — same FP drift
+    ``tests/test_sim_scale.py`` tolerates).  Everything else — record
+    counts, event kinds, placements, retry counts, checkpoint quanta —
+    must match *exactly*; a non-None return describes the first
+    divergence."""
+    ga, gb = _stream_groups(a), _stream_groups(b)
+    if set(ga) != set(gb):
+        return f"entity sets differ: {sorted(set(ga) ^ set(gb))!r}"
+    for key in sorted(ga):
+        ra, rb = ga[key], gb[key]
+        if len(ra) != len(rb):
+            return f"{key!r}: {len(ra)} vs {len(rb)} records"
+        for x, y in zip(ra, rb):
+            if x.kind != y.kind or x.uid != y.uid:
+                return f"{key!r}: {x!r} vs {y!r}"
+            if not _close(x.t, y.t, rel, abs_tol):
+                return f"{key!r}: t drift {x.t!r} vs {y.t!r} in {x!r}"
+            da, db = dict(x.data), dict(y.data)
+            if set(da) != set(db):
+                return f"{key!r}: payload keys {x!r} vs {y!r}"
+            for k in da:
+                if not _close(da[k], db[k], rel, abs_tol):
+                    return (f"{key!r}: payload {k}={da[k]!r} vs {db[k]!r} "
+                            f"in {x!r}")
+    return None
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+def _finite(x):
+    """JSON-safe float: non-finite values export as None."""
+    if x is None or not math.isfinite(x):
+        return None
+    return x
+
+
+def _pctl(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[idx]

@@ -319,6 +319,10 @@ class NetworkTopology:
             self.link_health.pop(key, None)
         else:
             self.link_health[key] = factor
+        tel = self.sim.telemetry
+        if tel is not None:
+            tel.emit("link_health", self.sim.now, "",
+                     link=f"{key[0]}:{key[1]}", factor=factor)
         if dirty is not None:
             us = self.users.get(key)
             if us:

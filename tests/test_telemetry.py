@@ -1,0 +1,300 @@
+"""Telemetry layer: gating, determinism, the cross-loop oracle, exporters.
+
+Four layers of guarantees:
+
+* **Gating is absolute**: ``Scenario.telemetry=None`` (the default) is
+  the pre-telemetry engine — every golden trace hash re-pinned here was
+  recorded before the layer existed and must stay byte-identical.
+* **Observation never perturbs**: telemetry *on* still reproduces the
+  same golden hashes — no RNG stream is touched, no scheduling decision
+  changes (the fault-storm and preemption pins are the sharp ones).
+* **The stream is a cross-loop oracle**: same scenario × seed gives
+  byte-identical streams on repeat runs of one loop and
+  ``diff_streams``-equivalent streams across ``run()`` vs
+  ``run(legacy=True)`` — identical per-entity event sequences, FP
+  tolerance only on timestamps/float payloads (the loops integrate
+  progress differently; same tolerance ``test_sim_scale`` uses).
+* **Record semantics**: every start is torn down exactly once even
+  under fault storms; counters, gauges, calibration and the Chrome
+  export are structurally sound.
+"""
+import dataclasses as dc
+import hashlib
+import json
+import random
+
+import pytest
+
+from repro.core import faults as FLT
+from repro.core import telemetry as TEL
+from repro.core.cluster import Cluster, Node, paper_cluster
+from repro.core.profiles import PAPER_BENCHMARKS
+from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
+from repro.core.simulator import Simulator
+
+pytestmark = pytest.mark.telemetry
+
+
+def small_fleet(n_hosts=16, slots=4):
+    return Cluster([Node(f"h{i}", n_slots=slots, n_domains=1)
+                    for i in range(n_hosts)])
+
+
+def exp2_subs(seed):
+    rng = random.Random(seed)
+    jobs = [w for w in PAPER_BENCHMARKS.values() for _ in range(4)]
+    rng.shuffle(jobs)
+    times = sorted(rng.uniform(0, 1200) for _ in jobs)
+    return list(zip(jobs, times))
+
+
+def trace_hash(sim, done):
+    jobs = sorted(
+        ((j.job.name, repr(j.submit_t), repr(j.start_t), repr(j.finish_t),
+          tuple(sorted(j.nodes_used.items()))) for j in done),
+        key=lambda t: (t[0], t[1]))
+    uns = sorted((j.job.name, repr(j.submit_t)) for j in sim.unschedulable)
+    return hashlib.sha256(repr((jobs, uns)).encode()).hexdigest()[:16]
+
+
+def storm_scenario(telemetry=None):
+    """The PR-8 fault-storm pin: FLEET_FAULTS + Daly checkpoints +
+    elastic gangs on a 16-host fleet."""
+    return dc.replace(SCENARIOS["FLEET_FAULTS"], ckpt_interval=250.0,
+                      telemetry=telemetry)
+
+
+def run_storm(telemetry=None, legacy=False):
+    subs = poisson_heavy_traffic(60, 64, seed=2, elastic_frac=0.3)
+    sim = Simulator(small_fleet(16), storm_scenario(telemetry), seed=2)
+    done = sim.run(list(subs), legacy=legacy)
+    return sim, done
+
+
+def run_prio(telemetry=None):
+    sc = dc.replace(SCENARIOS["FLEET_PRIO"],
+                    queue_cfg={"preempt": True, "preempt_min_prio": 2,
+                               "preempt_delay": 60.0},
+                    telemetry=telemetry)
+    subs = [(dc.replace(w, priority=i % 3), t) for i, (w, t) in enumerate(
+        poisson_heavy_traffic(60, 64, seed=2, unique_names=True))]
+    sim = Simulator(small_fleet(16), sc, seed=2)
+    done = sim.run(subs)
+    return sim, done
+
+
+# ----------------------------------------------------------------------
+# gating: telemetry unset -> pre-PR-9 golden hashes byte-identical,
+# and the Scenario default leaves the layer off entirely
+# ----------------------------------------------------------------------
+def test_flags_off_goldens_repinned():
+    sim = Simulator(paper_cluster(), SCENARIOS["CM_G_TG"], seed=0)
+    done = sim.run(exp2_subs(0))
+    assert trace_hash(sim, done) == "a576e2d104c610df"
+    assert sim.telemetry is None
+
+    sim, done = run_storm()
+    assert trace_hash(sim, done) == "812dfa07a36af609"
+
+    sim, done = run_prio()
+    assert trace_hash(sim, done) == "992fcda19f19cf0f"
+
+
+def test_telemetry_on_is_trace_neutral():
+    """Observation must not perturb: telemetry on (tracing, sampling,
+    audit all active) reproduces the flags-off goldens exactly — no RNG
+    stream touched, no scheduling decision changed."""
+    cfg = TEL.TelemetryConfig(metrics_interval=50.0)
+    sim, done = run_storm(cfg)
+    assert trace_hash(sim, done) == "812dfa07a36af609"
+    assert sim.telemetry.sink.n_emitted > 0
+    assert len(sim.telemetry.samples) > 0
+
+    sim, done = run_prio(cfg)
+    assert trace_hash(sim, done) == "992fcda19f19cf0f"
+    assert any(r.kind == "preempt" for r in sim.telemetry.records())
+
+
+# ----------------------------------------------------------------------
+# the cross-loop oracle
+# ----------------------------------------------------------------------
+def paper_stream(scn, legacy, **over):
+    sc = dc.replace(SCENARIOS[scn], telemetry=TEL.TelemetryConfig(),
+                    **over)
+    sim = Simulator(paper_cluster(), sc, seed=0)
+    sim.run(exp2_subs(0), legacy=legacy)
+    return sim.telemetry.canonical_records()
+
+
+def fleet_stream(scn, legacy):
+    sc = dc.replace(SCENARIOS[scn], telemetry=TEL.TelemetryConfig())
+    subs = poisson_heavy_traffic(100, 64, seed=3, unique_names=False)
+    sim = Simulator(small_fleet(16), sc, seed=0)
+    sim.run(list(subs), legacy=legacy)
+    return sim.telemetry.canonical_records()
+
+
+@pytest.mark.parametrize("over", [{}, {"job_ids": "uid"}])
+def test_stream_cross_loop_paper(over):
+    a = paper_stream("CM_G_TG", False, **over)
+    b = paper_stream("CM_G_TG", True, **over)
+    assert len(a) == len(b) > 0
+    assert TEL.diff_streams(a, b) is None
+    # repeat runs of one loop are byte-identical, both loops
+    assert repr(paper_stream("CM_G_TG", False, **over)) == repr(a)
+    assert repr(paper_stream("CM_G_TG", True, **over)) == repr(b)
+
+
+@pytest.mark.parametrize("scn", ["FLEET", "FLEET_EASY"])
+def test_stream_cross_loop_fleet(scn):
+    a, b = fleet_stream(scn, False), fleet_stream(scn, True)
+    assert len(a) == len(b) > 0
+    assert TEL.diff_streams(a, b) is None
+
+
+@pytest.mark.faults
+def test_stream_cross_loop_fault_storm():
+    """The sharpest oracle: checkpoints, elastic shrinks, fault kills
+    and retries must replay identically across the two loops."""
+    sim_h, _ = run_storm(TEL.TelemetryConfig())
+    sim_l, _ = run_storm(TEL.TelemetryConfig(), legacy=True)
+    a = sim_h.telemetry.canonical_records()
+    b = sim_l.telemetry.canonical_records()
+    kinds = {r.kind for r in a}
+    assert {"fault", "checkpoint", "shrink"} <= kinds
+    assert TEL.diff_streams(a, b) is None
+
+
+def test_diff_streams_catches_divergence():
+    a = paper_stream("CM_G_TG", False)
+    # dropped record
+    assert TEL.diff_streams(a, a[:-1]) is not None
+    # payload drift past tolerance
+    r = a[0]
+    bad = [TEL.TraceRecord(r.t + 1.0, r.kind, r.uid, r.data)] + list(a[1:])
+    assert TEL.diff_streams(a, bad) is not None
+    assert TEL.diff_streams(a, list(a)) is None
+
+
+# ----------------------------------------------------------------------
+# record semantics: conservation under the storm
+# ----------------------------------------------------------------------
+def teardown_kind(r):
+    return (r.kind in ("finish", "preempt")
+            or (r.kind == "fault" and r.get("event") == "kill"))
+
+
+@pytest.mark.faults
+def test_start_teardown_conservation_under_storm():
+    """Every start record is torn down exactly once — finish, preempt,
+    or fault kill — per (uid, seq) gang, even under the fault storm
+    (retries restart the same gang: starts and teardowns stay 1:1)."""
+    sim, done = run_storm(TEL.TelemetryConfig())
+    starts, downs = {}, {}
+    for r in sim.telemetry.records():
+        key = (r.uid, r.get("seq"))
+        if r.kind == "start":
+            starts[key] = starts.get(key, 0) + 1
+        elif teardown_kind(r):
+            downs[key] = downs.get(key, 0) + 1
+    assert sum(starts.values()) > 0
+    assert starts == {k: v for k, v in downs.items() if k in starts}
+    assert set(downs) == set(starts)
+    n_finish = sum(1 for r in sim.telemetry.records()
+                   if r.kind == "finish")
+    assert n_finish == len(done)
+
+
+def test_preempt_records_carry_waste():
+    sim, _ = run_prio(TEL.TelemetryConfig())
+    pre = [r for r in sim.telemetry.records() if r.kind == "preempt"]
+    assert pre and all(r.get("wasted") >= 0.0 for r in pre)
+    assert sim.perf["preemptions"] == len(pre)
+
+
+def test_reservation_records_on_easy_backfill():
+    sc = dc.replace(SCENARIOS["FLEET_EASY"],
+                    telemetry=TEL.TelemetryConfig())
+    subs = poisson_heavy_traffic(100, 64, seed=3, unique_names=False)
+    sim = Simulator(small_fleet(16), sc, seed=0)
+    sim.run(list(subs))
+    resv = [r for r in sim.telemetry.records() if r.kind == "reservation"]
+    assert resv
+    for r in resv:
+        assert "shadow" in dict(r.data) and "extra" in dict(r.data)
+    assert sim.perf["reservations"] == len(resv)
+
+
+# ----------------------------------------------------------------------
+# metrics registry: counters documented, perf read-through, gauges
+# ----------------------------------------------------------------------
+def test_perf_counters_are_the_registry():
+    sim, _ = run_storm(TEL.TelemetryConfig(metrics_interval=50.0))
+    assert set(sim.perf) == set(TEL.COUNTERS)
+    docs = TEL.describe_counters()
+    assert set(docs) == set(TEL.COUNTERS)
+    assert all(isinstance(d, str) and d for d in docs.values())
+    # metrics_summary snapshots the same store sim.perf aliases
+    snap = sim.telemetry.metrics_summary()["counters"]
+    assert snap == sim.perf
+    # fresh stores are independent
+    a, b = TEL.new_perf_counters(), TEL.new_perf_counters()
+    a["events"] += 1
+    assert b["events"] == 0
+
+
+def test_gauge_sampling_cadence():
+    iv = 100.0
+    sim, _ = run_storm(TEL.TelemetryConfig(metrics_interval=iv))
+    samples = sim.telemetry.samples
+    assert len(samples) > 2
+    ts = [s["t"] for s in samples]
+    assert ts == sorted(ts)
+    assert all(b - a >= iv - 1e-9 for a, b in zip(ts, ts[1:]))
+    for s in samples:
+        assert 0.0 <= s["util"] <= 1.0
+        assert s["queue_depth"] >= 0
+        assert s["reserved_slots"] >= 0
+        assert sum(s["nodes_by_state"].values()) == 16
+    # sampling off by default
+    sim, _ = run_storm(TEL.TelemetryConfig())
+    assert sim.telemetry.samples == []
+
+
+def test_ring_sink_bounds_memory():
+    cfg = TEL.TelemetryConfig(ring_size=32)
+    sim, _ = run_storm(cfg)
+    tel = sim.telemetry
+    assert len(tel.records()) == 32
+    assert tel.sink.n_emitted > 32
+    assert tel.metrics_summary()["n_records"] == tel.sink.n_emitted
+
+
+# ----------------------------------------------------------------------
+# exporters: calibration audit + Chrome trace
+# ----------------------------------------------------------------------
+def test_estimator_calibration_audit():
+    sim, done = run_storm(TEL.TelemetryConfig())
+    cal = sim.telemetry.calibration()
+    assert cal and set(cal) <= {"CPU", "MEMORY", "MIXED", "NETWORK"}
+    assert sum(c["n"] for c in cal.values()) == len(done)
+    for c in cal.values():
+        assert c["n"] > 0
+        assert 0.0 <= c["p50"] <= c["p90"] <= c["max"]
+
+
+def test_chrome_trace_roundtrip():
+    sim, _ = run_storm(TEL.TelemetryConfig())
+    trace = sim.telemetry.chrome_trace()
+    rt = json.loads(json.dumps(trace))
+    evs = rt["traceEvents"]
+    assert evs
+    phases = {e["ph"] for e in evs}
+    assert "X" in phases and "M" in phases
+    for e in evs:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+            assert {"pid", "tid", "name"} <= set(e)
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"jobs", "nodes"} <= names
