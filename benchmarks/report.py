@@ -14,6 +14,10 @@ Understands both row shapes the harness writes:
 * ``{"rows": {"arm": {"us_per_event": ...}, ...}}``  (BENCH_telemetry.json)
 * ``{"results": [{"scenario", "mode", "hosts", "us_per_event", ...}]}``
   (BENCH_sim_scale.json — row names synthesized from the sweep axes)
+* ``{"results": [{"arm", "rps", "seed", "p99_ms", ...}]}``
+  (BENCH_serve_fleet.json — serving-tier rows; ``us_per_event`` is the
+  diffed cost as usual, with ``p99_ms`` as the fallback value for rows
+  that carry latency but no event cost, e.g. the summary map)
 
 Rows present on only one side are reported but never fail the diff
 (benchmark sets grow PR over PR).  Exit status is 0 unless
@@ -39,18 +43,28 @@ def load_rows(path: str) -> Dict[str, float]:
             if not isinstance(r, dict):
                 continue
             name = r.get("name") or "_".join(
-                str(r[k]) for k in ("scenario", "mode", "hosts")
+                str(r[k]) for k in ("scenario", "mode", "arm", "rps",
+                                    "seed", "hosts")
                 if k in r)
-            val = r.get("us_per_call", r.get("us_per_event"))
-            if name and isinstance(val, (int, float)):
-                out[str(name)] = float(val)
+            val = _row_value(r)
+            if name and val is not None:
+                out[str(name)] = val
     elif isinstance(rows, dict):
         for name, r in rows.items():
             if isinstance(r, dict):
-                val = r.get("us_per_call", r.get("us_per_event"))
-                if isinstance(val, (int, float)):
-                    out[str(name)] = float(val)
+                val = _row_value(r)
+                if val is not None:
+                    out[str(name)] = val
     return out
+
+
+def _row_value(r: dict):
+    """The row's diffable cost: wall cost first, serving p99 fallback."""
+    for key in ("us_per_call", "us_per_event", "p99_ms"):
+        val = r.get(key)
+        if isinstance(val, (int, float)):
+            return float(val)
+    return None
 
 
 def diff(old: Dict[str, float], new: Dict[str, float],

@@ -17,7 +17,7 @@ import json
 
 
 SMOKE_JOBS = ("sched", "sim_scale", "preempt", "backfill", "faults",
-              "net_topo", "telemetry")
+              "net_topo", "telemetry", "serve_fleet")
 
 
 def main() -> None:
@@ -35,14 +35,14 @@ def main() -> None:
     csv_rows = []
     from benchmarks import (backfill, exp1_single_type, exp2_mixed,
                             exp3_frameworks, faults, net_topo, preempt,
-                            roofline, sched_efficiency, sim_scale,
-                            telemetry)
+                            roofline, sched_efficiency, serve_fleet,
+                            sim_scale, telemetry)
     jobs = {"exp1": exp1_single_type.run, "exp2": exp2_mixed.run,
             "exp3": exp3_frameworks.run, "sched": sched_efficiency.run,
             "backfill": backfill.run, "preempt": preempt.run,
             "faults": faults.run, "net_topo": net_topo.run,
             "roofline": roofline.run, "sim_scale": sim_scale.run,
-            "telemetry": telemetry.run}
+            "telemetry": telemetry.run, "serve_fleet": serve_fleet.run}
     for name, fn in jobs.items():
         if args.only and args.only != name:
             continue

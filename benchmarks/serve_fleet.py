@@ -1,0 +1,236 @@
+"""Serving-tier benchmark: SLO-classed dispatch vs FIFO under colocation.
+
+Drives the online serving tier (``FLEET_SERVE``: diurnal request streams,
+autoscaled replica gangs) colocated with a Poisson batch training load on
+one fleet, sweeping the request rate from under- to over-provisioned
+(the autoscaler's ``max_replicas`` cap binds at the top of the sweep, so
+requests genuinely queue) and records, per ``(arm, load)`` point:
+
+* per-class latency percentiles (p50/p95/p99) and SLO attainment —
+  the serving side of the trade-off curve;
+* fleet utilization (busy slot-seconds / capacity x makespan, replicas
+  included) — the colocation side;
+* batch-job throughput and mean response — what training pays;
+* event-loop cost (us/event) for the perf trajectory.
+
+The two arms differ *only* in the tier's request dispatch discipline:
+``slo`` (class priority, FIFO within a class) vs ``fifo`` (class-blind
+arrival order).  The acceptance property (checked and recorded in the
+JSON): at the overloaded end of the sweep, SLO-classed dispatch beats
+FIFO on interactive p99 SLO attainment at equal-or-better fleet
+utilization — reordering a queue is free capacity-wise.
+
+  python -m benchmarks.serve_fleet [--smoke] [--seeds N] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.core.cluster import Cluster, Node
+from repro.core.scenarios import SCENARIOS, poisson_heavy_traffic
+from repro.core.simulator import Simulator
+
+BATCH_UTILIZATION = 0.7       # offered batch load (x cluster capacity)
+N_PERIODS = 2.0               # diurnal cycles the request stream spans
+
+FULL = {"hosts": 32, "jobs": 240, "requests": 4800, "seeds": 2,
+        "rps_sweep": (3.0, 5.0, 8.0)}
+SMOKE = {"hosts": 16, "jobs": 60, "requests": 1200, "seeds": 1,
+         "rps_sweep": (8.0,)}
+
+# replica pool sized so the top of the rps sweep overloads it (the cap
+# binds at ~6.7 rps of mixed traffic, queues form at the diurnal peak —
+# the regime where dispatch order matters at all)
+SERVE_OVERRIDES = dict(max_replicas=4, concurrency=8, replica_tasks=4,
+                       scale_interval=15.0, scale_down_cooldown=60.0,
+                       downscale_hold=30.0)
+
+
+def fleet(n_hosts: int) -> Cluster:
+    return Cluster([Node(f"h{i}", n_slots=4, n_domains=1)
+                    for i in range(n_hosts)])
+
+
+def arms(n_requests: int, base_rps: float):
+    base = SCENARIOS["FLEET_SERVE"]
+    # day length such that the stream's expected span covers N_PERIODS
+    # diurnal cycles (the preempt benchmark's sizing idiom)
+    period = (n_requests / base_rps) / N_PERIODS
+    cfg = dataclasses.replace(base.serving, n_requests=n_requests,
+                              base_rps=base_rps, period=period,
+                              **SERVE_OVERRIDES)
+    return [
+        ("slo", dataclasses.replace(
+            base, name="SERVE_SLO",
+            serving=dataclasses.replace(cfg, discipline="slo"))),
+        ("fifo", dataclasses.replace(
+            base, name="SERVE_FIFO",
+            serving=dataclasses.replace(cfg, discipline="fifo"))),
+    ]
+
+
+def run_once(n_hosts: int, n_jobs: int, seed: int, scenario) -> dict:
+    cluster = fleet(n_hosts)
+    subs = poisson_heavy_traffic(n_jobs, cluster.total_slots, seed=seed,
+                                 utilization=BATCH_UTILIZATION)
+    sim = Simulator(cluster, scenario, seed=seed)
+    # busy slot-second accounting via the discipline's start/stop hooks
+    # (the preempt benchmark's idiom) — replicas included, so utilization
+    # reflects what the fleet actually carried
+    busy = 0.0
+    since: dict = {}
+    disc = sim.discipline
+    orig_start, orig_stop = disc.on_start, disc.on_stop
+
+    def on_start(jr):
+        since[jr] = sim.now
+        orig_start(jr)
+
+    def on_stop(jr):
+        nonlocal busy
+        busy += (sim.now - since.pop(jr)) * jr.gran.n_tasks
+        orig_stop(jr)
+
+    disc.on_start, disc.on_stop = on_start, on_stop
+    t0 = time.perf_counter()
+    done = sim.run(subs)
+    wall = time.perf_counter() - t0
+    srv = sim.serving
+    makespan = Simulator.makespan(done)
+    batch = [jr for jr in done if jr.tenant != srv.cfg.tenant]
+    stats = srv.latency_stats()
+    inter = stats.get("interactive", {})
+    return {
+        "seed": seed,
+        "requests": len(srv.completed),
+        "requeued": sim.perf["serve_requeued"],
+        "dropped": len(srv.dropped),
+        "scale_ups": sim.perf["serve_scale_ups"],
+        "scale_downs": sim.perf["serve_scale_downs"],
+        "batch_completed": len(batch),
+        "batch_mean_response_s": round(
+            sum(jr.response_time for jr in batch) / len(batch), 1)
+        if batch else None,
+        "events": sim.n_events,
+        "wall_s": round(wall, 3),
+        "us_per_event": round(wall / max(sim.n_events, 1) * 1e6, 2),
+        "sim_makespan_s": round(makespan, 1),
+        "utilization": round(
+            busy / (cluster.total_slots * makespan), 4) if makespan else 0.0,
+        "p99_ms": round(inter.get("p99", 0.0) * 1e3, 1),
+        "classes": {name: {"n": s.get("n", 0),
+                           "p50_s": round(s.get("p50", 0.0), 3),
+                           "p95_s": round(s.get("p95", 0.0), 3),
+                           "p99_s": round(s.get("p99", 0.0), 3),
+                           "slo_attainment": round(
+                               s.get("slo_attainment", 0.0), 4)}
+                    for name, s in stats.items()},
+    }
+
+
+def _mean(rows, key):
+    vals = [r[key] for r in rows if r.get(key) is not None]
+    return sum(vals) / len(vals) if vals else 0.0
+
+
+def run(csv_rows=None, smoke: bool = False, seeds: int = None,
+        out_path: str = None):
+    cfg = SMOKE if smoke else FULL
+    n_seeds = seeds if seeds is not None else cfg["seeds"]
+    if out_path is None:
+        out_path = ("BENCH_serve_fleet_smoke.json" if smoke
+                    else "BENCH_serve_fleet.json")
+    print("\n== Serving tier colocated with batch training ==")
+    print(f"   {cfg['hosts']} hosts x 4 slots, {cfg['jobs']} batch jobs "
+          f"(x{BATCH_UTILIZATION} load), {cfg['requests']} requests, "
+          f"rps sweep {cfg['rps_sweep']}, {n_seeds} seed(s)")
+    results = []
+    summary: dict = {}
+    for rps in cfg["rps_sweep"]:
+        for arm_name, scn in arms(cfg["requests"], rps):
+            rows = [run_once(cfg["hosts"], cfg["jobs"], seed, scn)
+                    for seed in range(n_seeds)]
+            for r in rows:
+                r["arm"] = arm_name
+                r["rps"] = rps
+            results.extend(rows)
+            att = _mean(rows, "utilization")
+            inter_att = sum(
+                r["classes"]["interactive"]["slo_attainment"]
+                for r in rows) / len(rows)
+            summary[f"{arm_name}@rps{rps:g}"] = {
+                "arm": arm_name, "rps": rps,
+                "p99_ms": round(_mean(rows, "p99_ms"), 1),
+                "interactive_slo_attainment": round(inter_att, 4),
+                "utilization": round(att, 4),
+                "batch_mean_response_s": round(
+                    _mean(rows, "batch_mean_response_s"), 1),
+                "requeued": round(_mean(rows, "requeued"), 1),
+                "dropped": round(_mean(rows, "dropped"), 1),
+                "us_per_event": round(_mean(rows, "us_per_event"), 2),
+            }
+            s = summary[f"{arm_name}@rps{rps:g}"]
+            print(f"  {arm_name:5s}@rps{rps:<4g} "
+                  f"p99={s['p99_ms']:8.1f}ms "
+                  f"slo_att={s['interactive_slo_attainment']:.3f} "
+                  f"util={s['utilization']:.3f} "
+                  f"batch_resp={s['batch_mean_response_s']:.1f}s")
+            if csv_rows is not None:
+                csv_rows.append((
+                    f"serve_{arm_name}_rps{rps:g}",
+                    s["us_per_event"],
+                    f"p99_ms={s['p99_ms']};"
+                    f"slo_att={s['interactive_slo_attainment']};"
+                    f"util={s['utilization']}"))
+    # acceptance: at the overloaded end of the sweep, SLO-classed
+    # dispatch beats FIFO on interactive p99 attainment at
+    # equal-or-better fleet utilization
+    top = max(cfg["rps_sweep"])
+    slo, fifo = summary[f"slo@rps{top:g}"], summary[f"fifo@rps{top:g}"]
+    acceptance = {
+        "rps": top,
+        "interactive_slo_attainment_slo": slo["interactive_slo_attainment"],
+        "interactive_slo_attainment_fifo": fifo["interactive_slo_attainment"],
+        "attainment_improved": (slo["interactive_slo_attainment"]
+                                > fifo["interactive_slo_attainment"]),
+        "utilization_slo": slo["utilization"],
+        "utilization_fifo": fifo["utilization"],
+        "utilization_preserved": (slo["utilization"]
+                                  >= 0.98 * fifo["utilization"]),
+        "no_requests_lost": all(r["dropped"] == 0 for r in results),
+    }
+    ok = (acceptance["attainment_improved"]
+          and acceptance["utilization_preserved"]
+          and acceptance["no_requests_lost"])
+    print(f"  acceptance @rps{top:g}: interactive attainment "
+          f"{fifo['interactive_slo_attainment']:.3f} -> "
+          f"{slo['interactive_slo_attainment']:.3f}, "
+          f"util {fifo['utilization']:.3f} -> {slo['utilization']:.3f} "
+          f"({'OK' if ok else 'FAIL'})")
+    payload = {"smoke": smoke,
+               "config": {**cfg, "seeds": n_seeds,
+                          "batch_utilization": BATCH_UTILIZATION,
+                          "serve_overrides": SERVE_OVERRIDES},
+               "results": results, "summary": summary,
+               "acceptance": acceptance}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep for CI smoke")
+    ap.add_argument("--seeds", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, seeds=args.seeds, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

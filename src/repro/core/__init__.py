@@ -17,6 +17,24 @@
   worker), and ``fairshare`` (weighted multi-tenant deficit accounting
   over consumed slot-seconds).  ``Workload.tenant`` /
   ``Workload.priority`` are the identities they read;
+* ``serving`` — the online serving tier (``Scenario.serving``, default
+  ``None`` = off): a second application-layer workload species.
+  SLO-classed request traffic (:class:`~repro.core.serving.SLOClass`,
+  diurnal Poisson streams via ``scenarios.diurnal_request_stream``)
+  served by autoscaled replica gangs that are *ordinary jobs* to the
+  layers below — scale-up admission flows through the queue discipline
+  and placement policy, replica speed is the engine's contention model
+  (colocation with training slows serving, measurably), scale-down
+  returns capacity through the reserved-capacity overlay with a
+  ``downscale_hold`` warm-capacity window (the third overlay writer,
+  coordinating via ``claimed_slots()`` with the discipline's resume
+  claims and the fault engine's growth holds).  Request dispatch has
+  its own discipline knob (``"slo"`` class-priority vs ``"fifo"``),
+  the benchmark's two arms.  **Gating contract** (the
+  faults/topology/telemetry pattern): ``Scenario.serving is None``
+  constructs no tier, every engine hook is one ``is not None`` check,
+  the request stream draws from its own RNG — all pre-serving golden
+  trace hashes stay byte-identical;
 * ``estimates`` — pluggable :class:`~repro.core.estimates
   .RuntimeEstimator` objects owning *runtime predictions*
   (``Scenario.estimator``): ``remaining`` (the seed's optimistic
@@ -164,7 +182,11 @@ from repro.core.profiles import (MEM_WEIGHT, PAPER_BENCHMARKS, Profile,
 from repro.core.queues import (QUEUES, FairShareQueue, FifoQueue,
                                PriorityQueue, QueueDiscipline, make_queue)
 from repro.core.scenarios import (SCENARIOS, TENANT_CLASSES, diurnal_poisson,
-                                  get_scenario, poisson_heavy_traffic)
+                                  diurnal_request_stream, get_scenario,
+                                  poisson_heavy_traffic)
+from repro.core.serving import (DEFAULT_SLO_CLASSES, ServeRequest,
+                                ServingConfig, ServingTier, SLOClass,
+                                make_serving)
 from repro.core.simulator import PerfParams, Scenario, Simulator
 from repro.core.telemetry import (COUNTERS, RingSink, Telemetry,
                                   TelemetryConfig, TraceRecord, TraceSink,
@@ -186,7 +208,9 @@ __all__ = ["Cluster", "Node", "fleet_cluster", "hetero_cluster",
            "Profile", "Workload", "classify_roofline", "QUEUES",
            "QueueDiscipline", "FifoQueue", "PriorityQueue",
            "FairShareQueue", "make_queue", "SCENARIOS", "TENANT_CLASSES",
-           "diurnal_poisson", "get_scenario", "poisson_heavy_traffic",
+           "diurnal_poisson", "diurnal_request_stream", "get_scenario",
+           "poisson_heavy_traffic", "DEFAULT_SLO_CLASSES", "SLOClass",
+           "ServeRequest", "ServingConfig", "ServingTier", "make_serving",
            "PerfParams", "Scenario", "Simulator", "COUNTERS",
            "RingSink", "Telemetry", "TelemetryConfig", "TraceRecord",
            "TraceSink", "chrome_trace", "describe_counters",

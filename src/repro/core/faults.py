@@ -790,6 +790,10 @@ class FaultEngine:
         # victim's freed slots would lock the victim out of them
         for nm, s in self.sim.discipline.claimed_slots().items():
             held[nm] = held.get(nm, 0) + s
+        # serving scale-down holds are the third overlay writer
+        if self.sim.serving is not None:
+            for nm, s in self.sim.serving.claimed_slots().items():
+                held[nm] = held.get(nm, 0) + s
         mine = set(jr.nodes_used) if jr.nodes_used else set()
         avail: List[list] = []
         for n in cluster.nodes:

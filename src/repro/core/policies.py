@@ -219,6 +219,8 @@ class DefaultPolicy(PlacementPolicy):
             reserve = sim.faults.merge_overlay(jr, reserve)
         # discipline-owned exclusions (resume-reservations; base: no-op)
         reserve = sim.discipline.merge_overlay(jr, reserve)
+        if sim.serving is not None:   # scale-down capacity holds withheld
+            reserve = sim.serving.merge_overlay(jr, reserve)
         keyed = sim.sc.job_ids == "uid"
         workers = make_workers(jr.job, jr.gran, uid=jr.uid)
         # a reserved-capacity overlay seeds the staged map: for this
@@ -341,6 +343,8 @@ class TaskGroupPolicy(PlacementPolicy):
             reserve = sim.faults.merge_overlay(jr, reserve)
         # discipline-owned exclusions (resume-reservations; base: no-op)
         reserve = sim.discipline.merge_overlay(jr, reserve)
+        if sim.serving is not None:   # scale-down capacity holds withheld
+            reserve = sim.serving.merge_overlay(jr, reserve)
         if not use_index:            # legacy: rebuild the gang every attempt
             workers = make_workers(jr.job, jr.gran, uid=jr.uid)
             return TG.schedule_job(sim.cluster, workers, jr.gran.n_groups,

@@ -283,6 +283,18 @@ class PriorityQueue(QueueDiscipline):
         need_worker = head.gran.tasks_per_worker
         free_total = cluster.free_slots
         cur_max = cluster.max_free()
+        # serving scale-down holds withhold free slots from general
+        # admission (third overlay writer): the deficit check must not
+        # count them for a non-exempt head, or preemption stays disabled
+        # while the binder (which honors the holds) cannot place it.
+        held: Dict[str, int] = {}
+        srv = sim.serving
+        if srv is not None and not srv.is_exempt(head):
+            held = srv.claimed_slots()
+            if held:
+                free_total -= sum(held.values())
+                cur_max = max((n.free - held.get(n.name, 0)
+                               for n in cluster.nodes), default=0)
         if free_total >= need_total and cur_max >= need_worker:
             return False
         cutoff = head.priority if self.preempt_below is None \
@@ -322,7 +334,7 @@ class PriorityQueue(QueueDiscipline):
             for node, tasks in jr.nodes_used.items():
                 f = freed.get(node)
                 if f is None:
-                    f = cluster.node(node).free
+                    f = cluster.node(node).free - held.get(node, 0)
                 f += tasks
                 freed[node] = f
                 if f > cur_max:
@@ -348,7 +360,7 @@ class PriorityQueue(QueueDiscipline):
                 nd = cluster.node(node_name)
                 if nd.n_slots < need_worker:
                     continue                   # can never host the worker
-                f = nd.free
+                f = nd.free - held.get(node_name, 0)
                 csum = 0.0
                 subset = []
                 for jr, tasks in vs:

@@ -20,6 +20,8 @@ from typing import Dict, List, Sequence, Tuple
 
 from repro.core.faults import FaultConfig, ResiliencePolicy
 from repro.core.profiles import Profile, Workload
+from repro.core.serving import DEFAULT_SLO_CLASSES, ServeRequest, \
+    ServingConfig
 from repro.core.simulator import Scenario
 from repro.core.topology import TopologyConfig
 
@@ -154,6 +156,20 @@ SCENARIOS: Dict[str, Scenario] = {
                                topology=TopologyConfig(),
                                faults=FaultConfig(link_mtbf=60_000.0),
                                resilience=ResiliencePolicy(regrow=True)),
+    # ---- online serving tier (repro.core.serving) ------------------------
+    # SLO-classed request traffic colocated with the training fleet:
+    # autoscaled serving replica gangs admitted through the same queue
+    # discipline + binder as training jobs, scale-down capacity returned
+    # via the reserved-capacity overlay, per-class latency percentiles on
+    # the telemetry registry.  Priority queue (aging, no preemption —
+    # replicas sit at the top class already) so scale-ups overtake queued
+    # batch work instead of waiting behind it.  Every scenario above
+    # leaves ``serving=None`` — tier off, traces byte-identical
+    "FLEET_SERVE": Scenario("FLEET_SERVE", affinity=True,
+                            policy="granularity", taskgroup=True,
+                            job_ids="uid", queue="priority",
+                            queue_cfg={"aging_tau": 600.0},
+                            serving=ServingConfig()),
 }
 
 
@@ -288,3 +304,62 @@ def diurnal_poisson(n_jobs: int, cluster_slots: int, seed: int = 0,
                                          tenant=tenant, priority=prio), t))
         i += 1
     return subs
+
+
+def diurnal_request_stream(n_requests: int, seed: int = 0,
+                           base_rps: float = 2.0,
+                           amplitude: float = 0.6,
+                           period: float = 1200.0,
+                           slo_classes=DEFAULT_SLO_CLASSES,
+                           prompt_tokens: int = 512,
+                           decode_tokens: int = 128,
+                           ) -> List["ServeRequest"]:
+    """Request-level diurnal arrivals for the online serving tier.
+
+    The request analogue of :func:`diurnal_poisson`: an inhomogeneous
+    Poisson stream (same Lewis-Shedler thinning) whose rate follows::
+
+        lambda(t) = base_rps * (1 + amplitude * sin(2*pi*t/period - pi/2))
+
+    troughing at t=0 and peaking at ``period/2`` — the load swing the
+    serving autoscaler tracks.  Each accepted arrival draws an SLO class
+    by its ``arrival_frac`` and geometric-ish token counts (shifted
+    exponential around the class-scaled means), the inputs to the
+    serving tier's prefill/decode service-time model.
+
+    The stream uses its *own* seeded RNG (decoupled from the job-arrival
+    generators above), so adding serving traffic to a scenario never
+    perturbs the training-job arrival draws.
+    """
+    import math
+
+    rng = random.Random((seed << 1) ^ 0x5E21)
+    rate_max = base_rps * (1.0 + amplitude)
+    cum: List[Tuple[float, object]] = []
+    acc = 0.0
+    for cls in slo_classes:
+        acc += cls.arrival_frac
+        cum.append((acc, cls))
+    total_frac = acc
+    t = 0.0
+    reqs: List[ServeRequest] = []
+    while len(reqs) < n_requests:
+        t += rng.expovariate(rate_max)
+        lam = base_rps * (1.0 + amplitude
+                          * math.sin(2.0 * math.pi * t / period
+                                     - math.pi / 2.0))
+        if rng.random() * rate_max > lam:
+            continue
+        u = rng.random() * total_frac
+        cls = cum[-1][1]
+        for edge, c in cum:
+            if u <= edge:
+                cls = c
+                break
+        pt = 1 + int(rng.expovariate(
+            1.0 / max(prompt_tokens * cls.prompt_mult, 1.0)))
+        dt = 1 + int(rng.expovariate(
+            1.0 / max(decode_tokens * cls.decode_mult, 1.0)))
+        reqs.append(ServeRequest(rid=len(reqs), cls=cls.name, t_arrive=t,
+                                 prompt_tokens=pt, decode_tokens=dt))
+    return reqs

@@ -1,0 +1,711 @@
+"""Online serving tier: SLO-classed request traffic colocated with training.
+
+The application layer gains a second workload species: *requests*.  A
+request is three orders of magnitude smaller than a batch gang — a prompt
+(prefill phase) plus a stream of decoded tokens (decode phase), the
+``InferenceRequest`` shape of the repo's own continuous-batching engine
+(``repro.serve.engine``) — and arrives in diurnal Poisson streams
+(Lewis-Shedler thinning, ``scenarios.diurnal_request_stream``) at rates
+that swing above and below the provisioned capacity.  Serving them on the
+same fleet as training means every layer of the stack participates:
+
+* **Replica gangs** — serving capacity is provisioned as long-lived gangs
+  (``replica_tasks`` tasks, ``concurrency`` concurrent decode slots each)
+  submitted through ``Simulator.submit`` like any training job, so
+  *scale-up admission flows through the queue disciplines and placement
+  policies*: a replica waits behind (or, class permitting, preempts) the
+  batch queue, is placed by the scenario's binder, and its speed is the
+  engine's own contention model — a replica sharing a node with STREAM
+  jobs serves slower, which is exactly the colocation trade-off the
+  benchmark curve measures.  Replicas carry ``base_runtime = 1e18`` (a
+  finite sentinel: ``inf`` would poison the preemption cost and
+  node-failure resume arithmetic) and never finish on their own; the tier
+  tears them down through ``Simulator._on_stop``.
+
+* **SLO queue classes** — each request carries an :class:`SLOClass`
+  (latency target + class priority), the request-level mirror of the
+  job-level priority classes in ``repro.core.queues``.  Dispatch order is
+  the tier's queue discipline: ``"slo"`` serves classes by priority (FIFO
+  within a class), ``"fifo"`` ignores class entirely — the benchmark's
+  two arms.
+
+* **Autoscaling through the reserved-capacity overlay** — a control tick
+  every ``scale_interval`` sim-seconds sizes the replica pool to demand.
+  Scale-down drains a replica (no new dispatches, in-flight requests
+  finish) and then releases its slots — but withholds them in the
+  PR-5 reserved-capacity overlay for ``downscale_hold`` seconds
+  (:meth:`ServingTier.merge_overlay` composes into both binders'
+  ``place(reserve=)``, next to the fault engine's and the discipline's
+  overlays; :meth:`claimed_slots` coordinates with the other overlay
+  writers).  The tier's own scale-ups are exempt — a load swing inside
+  the hold window re-admits a replica onto its own still-warm capacity
+  instead of queueing behind batch jobs; expiry returns the capacity to
+  the general fleet.  No hold survives the run (shutdown releases all).
+
+* **Telemetry** — request/scale counters live in the PR-9 counter
+  registry (``telemetry.COUNTERS``, ``serve_*``), per-class latency
+  percentiles and queue depths ride the sampled-gauge stream
+  (``Telemetry._sample`` → ``samples[i]["serving"]``), and replica
+  lifecycle emits ``"scale"`` trace records.
+
+Gating contract (the faults/topology/telemetry pattern): everything hangs
+off ``Scenario.serving``; ``None`` (the default) constructs no tier,
+every engine hook is a single ``is not None`` check, no RNG stream is
+touched — all pre-serving golden trace hashes stay byte-identical.
+
+Approximations (documented, deterministic): a request's service time is
+priced at dispatch from the replica's *current* gang speed
+(``prefill_tokens/prefill_tok_s + decode_tokens/decode_tok_s`` divided by
+``jr.speed``) and not re-priced if co-location changes mid-request —
+request lifetimes are seconds against minutes-long batch events, so the
+staleness window is small.  Pair the tier with non-EASY placement:
+an EASY shadow window projected onto never-finishing replicas is
+effectively infinite (the classic EASY-with-immortal-jobs pathology).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.profiles import Profile, Workload
+
+# finite "never finishes" sentinel: large enough that no simulated horizon
+# reaches it, finite so ``base_runtime - remaining`` stays a number (the
+# preemption victim cost and checkpoint-resume arithmetic both compute it)
+_REPLICA_RUNTIME = 1e18
+
+
+# --------------------------------------------------------------------------
+# SLO classes + configuration
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One latency class of request traffic.
+
+    ``priority`` orders dispatch under the ``"slo"`` discipline (higher
+    first — the request-level mirror of ``Workload.priority``);
+    ``slo_s`` is the end-to-end (arrival → last token) latency target;
+    ``arrival_frac`` its share of the stream; ``prompt_mult`` /
+    ``decode_mult`` scale the stream's token-length draws, so interactive
+    traffic is short and batch-class traffic long, like real mixes."""
+    name: str
+    slo_s: float
+    priority: int
+    arrival_frac: float
+    prompt_mult: float = 1.0
+    decode_mult: float = 1.0
+
+
+DEFAULT_SLO_CLASSES: Tuple[SLOClass, ...] = (
+    SLOClass("interactive", slo_s=10.0, priority=2, arrival_frac=0.50,
+             prompt_mult=0.5, decode_mult=0.5),
+    SLOClass("standard", slo_s=30.0, priority=1, arrival_frac=0.35),
+    SLOClass("batch", slo_s=240.0, priority=0, arrival_frac=0.15,
+             prompt_mult=2.0, decode_mult=4.0),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """``Scenario.serving``.  ``None`` (the scenario default) removes the
+    tier entirely (gating contract above)."""
+    # request stream (scenarios.diurnal_request_stream; seeded from the
+    # simulator's base seed — reproducible per scenario × seed)
+    n_requests: int = 600
+    base_rps: float = 2.0                 # cycle-mean requests/second
+    amplitude: float = 0.6                # diurnal swing: base*(1 ± amp)
+    period: float = 1200.0                # day/night cycle, sim-seconds
+    slo_classes: Tuple[SLOClass, ...] = DEFAULT_SLO_CLASSES
+    prompt_tokens: int = 512              # mean prompt length (tokens)
+    decode_tokens: int = 128              # mean new tokens per request
+    # replica shape (the gang the autoscaler submits)
+    service: str = "serve-rep"            # workload/uid name base
+    replica_tasks: int = 4                # gang width
+    concurrency: int = 8                  # decode slots per replica
+    prefill_tok_s: float = 16000.0        # replica prefill throughput
+    decode_tok_s: float = 32.0            # per-slot decode rate
+    replica_profile: str = "cpu+memory"   # roofline class (Profile value)
+    tenant: str = "serve"                 # queueing identities: the
+    replica_priority: int = 2             # disciplines read these
+    # request dispatch discipline: "slo" (class priority, FIFO within)
+    # or "fifo" (arrival order, class-blind) — the benchmark's two arms
+    discipline: str = "slo"
+    # autoscaler
+    min_replicas: int = 1                 # warm floor while traffic flows
+    max_replicas: int = 8
+    target_util: float = 0.75             # sizing: demand / (slots*util)
+    scale_interval: float = 30.0          # control-tick cadence
+    scale_down_cooldown: float = 120.0    # min gap between downscales
+    downscale_hold: float = 60.0          # overlay hold on freed slots
+
+
+class ServeRequest:
+    """One request: arrival + token shape in, dispatch/finish stamps out.
+
+    ``latency_s = wait_s + service_s`` by construction; the conservation
+    test recomputes it from the stamps.  ``_ver`` invalidates the pending
+    completion event when a replica kill re-queues the request."""
+    __slots__ = ("rid", "cls", "t_arrive", "prompt_tokens", "decode_tokens",
+                 "t_dispatch", "t_finish", "service_s", "rep", "_ver")
+
+    def __init__(self, rid: int, cls: str, t_arrive: float,
+                 prompt_tokens: int, decode_tokens: int):
+        self.rid = rid
+        self.cls = cls
+        self.t_arrive = t_arrive
+        self.prompt_tokens = prompt_tokens
+        self.decode_tokens = decode_tokens
+        self.t_dispatch: Optional[float] = None
+        self.t_finish: Optional[float] = None
+        self.service_s: Optional[float] = None
+        self.rep = None
+        self._ver = 0
+
+    @property
+    def wait_s(self) -> float:
+        return self.t_dispatch - self.t_arrive
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_finish - self.t_arrive
+
+    def __repr__(self):
+        return (f"ServeRequest({self.rid}, {self.cls!r}, "
+                f"t={self.t_arrive:.1f})")
+
+
+class _Replica:
+    """Tier-side state of one running replica gang."""
+    __slots__ = ("jr", "rid", "inflight", "draining", "reqs")
+
+    def __init__(self, jr, rid: int):
+        self.jr = jr
+        self.rid = rid
+        self.inflight = 0
+        self.draining = False
+        self.reqs: Dict[ServeRequest, None] = {}   # insertion-ordered set
+
+
+def make_serving(sim) -> Optional["ServingTier"]:
+    cfg = sim.sc.serving
+    if cfg is None:
+        return None
+    return ServingTier(sim, cfg)
+
+
+# event kinds in the tier's private heap
+_TICK, _DONE, _HOLD = 0, 1, 2
+
+
+class ServingTier:
+    """Request streams, SLO dispatch, autoscaled replicas (module doc)."""
+
+    def __init__(self, sim, cfg: ServingConfig):
+        self.sim = sim
+        self.cfg = cfg
+        self._profile = Profile(cfg.replica_profile)
+        if cfg.replica_tasks > sim.cluster.total_slots:
+            raise ValueError(
+                f"serving replica gang ({cfg.replica_tasks} tasks) cannot "
+                f"fit the fleet ({sim.cluster.total_slots} slots)")
+        self._classes: Dict[str, SLOClass] = {c.name: c
+                                              for c in cfg.slo_classes}
+        self._class_order = [c.name for c in
+                             sorted(cfg.slo_classes,
+                                    key=lambda c: (-c.priority, c.name))]
+        # the arrival stream is deterministic per (config, base seed) and
+        # drawn from its own RNG — the simulator's stream is untouched
+        from repro.core import scenarios as SCN   # lazy: no import cycle
+        self._arrivals: List[ServeRequest] = SCN.diurnal_request_stream(
+            cfg.n_requests, seed=sim._base_seed, base_rps=cfg.base_rps,
+            amplitude=cfg.amplitude, period=cfg.period,
+            slo_classes=cfg.slo_classes, prompt_tokens=cfg.prompt_tokens,
+            decode_tokens=cfg.decode_tokens)
+        self._arr_idx = 0
+        self._queues: Dict[str, collections.deque] = \
+            {name: collections.deque() for name in self._class_order}
+        self._fifo: collections.deque = collections.deque()
+        self._n_queued = 0
+        self._n_inflight = 0
+        self.replicas: Dict[object, _Replica] = {}   # running jr -> replica
+        self._pending: Dict[object, int] = {}        # queued jr -> rid
+        self._events: List[tuple] = []               # (t, seq, kind, payload)
+        self._eseq = 0
+        self._next_tick: Optional[float] = None
+        self._holds: Dict[int, Dict[str, int]] = {}  # hold id -> {node: slots}
+        self._hold_seq = 0
+        self._next_rid = 0
+        self._last_downscale = float("-inf")
+        self._shutdown = False
+        self.completed: List[ServeRequest] = []
+        self.dropped: List[ServeRequest] = []
+        self._lat: Dict[str, List[float]] = {name: []
+                                             for name in self._class_order}
+        # warm start: the first control tick (min_replicas pool) fires at
+        # t=0, before the first arrival
+        self._schedule_tick(0.0)
+
+    # ---------------- event-loop integration (faults-engine pattern) ------
+    def work_pending(self) -> bool:
+        """Keeps the event loop alive; the deadlock break consults the
+        negation.  Invariant: while this is True and shutdown has not
+        fired, a control tick is scheduled — so :meth:`next_time` never
+        returns None when work is pending."""
+        return (self._arr_idx < len(self._arrivals)
+                or self._n_queued > 0 or self._n_inflight > 0
+                or bool(self.replicas) or bool(self._pending)
+                or bool(self._holds) or bool(self._events))
+
+    def next_time(self) -> Optional[float]:
+        t = None
+        if self._arr_idx < len(self._arrivals):
+            t = self._arrivals[self._arr_idx].t_arrive
+        if self._events:
+            te = self._events[0][0]
+            if t is None or te < t:
+                t = te
+        return t
+
+    def process_due(self, dirty_nodes: Optional[set]) -> None:
+        """Handle everything due at ``sim.now``: arrivals enqueue,
+        completions free decode slots, holds expire, control ticks run
+        the autoscaler; then dispatch onto whatever capacity is free."""
+        sim = self.sim
+        now = sim.now
+        eps = 1e-12
+        perf = sim.perf
+        arr = self._arrivals
+        changed = False
+        while self._arr_idx < len(arr) \
+                and arr[self._arr_idx].t_arrive <= now + eps:
+            self._enqueue(arr[self._arr_idx])
+            self._arr_idx += 1
+            perf["serve_requests"] += 1
+            changed = True
+        ev = self._events
+        while ev and ev[0][0] <= now + eps:
+            _, _, kind, payload = heapq.heappop(ev)
+            if kind == _DONE:
+                req, ver = payload
+                if ver != req._ver:
+                    continue            # stale: re-queued by a replica kill
+                self._complete(req, dirty_nodes)
+                changed = True
+            elif kind == _HOLD:
+                self._expire_hold(payload)
+            else:                       # _TICK
+                self._next_tick = None
+                self._tick(dirty_nodes)
+                changed = True
+        if changed and not self._shutdown:
+            self._dispatch()
+        if not self._shutdown and self._next_tick is None \
+                and self.work_pending():
+            self._schedule_tick(now + self.cfg.scale_interval)
+
+    def _schedule_tick(self, t: float) -> None:
+        if self._next_tick is None:
+            self._next_tick = t
+            heapq.heappush(self._events, (t, self._eseq, _TICK, None))
+            self._eseq += 1
+
+    # ---------------- request queueing + dispatch --------------------------
+    def _enqueue(self, req: ServeRequest) -> None:
+        if self.cfg.discipline == "slo":
+            self._queues[req.cls].append(req)
+        else:
+            self._fifo.append(req)
+        self._n_queued += 1
+
+    def _pop_next(self) -> Optional[ServeRequest]:
+        if self.cfg.discipline == "slo":
+            for name in self._class_order:
+                q = self._queues[name]
+                if q:
+                    self._n_queued -= 1
+                    return q.popleft()
+            return None
+        if self._fifo:
+            self._n_queued -= 1
+            return self._fifo.popleft()
+        return None
+
+    def _requeue_front(self, reqs: List[ServeRequest]) -> None:
+        """Kill-requeue: back to the head of their queues, arrival order
+        preserved (the aging-clock analogue — a killed request must not
+        queue behind traffic that arrived after it)."""
+        for req in sorted(reqs, key=lambda r: r.t_arrive, reverse=True):
+            if self.cfg.discipline == "slo":
+                self._queues[req.cls].appendleft(req)
+            else:
+                self._fifo.appendleft(req)
+            self._n_queued += 1
+
+    def _dispatch(self) -> None:
+        if not self._n_queued or not self.replicas:
+            return
+        cfg = self.cfg
+        now = self.sim.now
+        # accepting replicas in replica-id order (deterministic; the pool
+        # is small — max_replicas — so the per-dispatch argmax is cheap)
+        avail = [rep for rep in sorted(self.replicas.values(),
+                                       key=lambda r: r.rid)
+                 if not rep.draining and rep.inflight < cfg.concurrency]
+        while self._n_queued and avail:
+            rep = max(avail, key=lambda r: (cfg.concurrency - r.inflight,
+                                            -r.rid))
+            req = self._pop_next()
+            if req is None:
+                return
+            speed = rep.jr.speed if rep.jr.speed > 1e-9 else 1e-9
+            service = (req.prompt_tokens / cfg.prefill_tok_s
+                       + req.decode_tokens / cfg.decode_tok_s) / speed
+            req.t_dispatch = now
+            req.service_s = service
+            req.rep = rep
+            rep.inflight += 1
+            rep.reqs[req] = None
+            self._n_inflight += 1
+            heapq.heappush(self._events,
+                           (now + service, self._eseq, _DONE,
+                            (req, req._ver)))
+            self._eseq += 1
+            if rep.inflight >= cfg.concurrency:
+                avail.remove(rep)
+
+    def _complete(self, req: ServeRequest,
+                  dirty_nodes: Optional[set]) -> None:
+        sim = self.sim
+        rep = req.rep
+        req.t_finish = sim.now
+        req.rep = None
+        if rep is not None and req in rep.reqs:
+            del rep.reqs[req]
+            rep.inflight -= 1
+        self._n_inflight -= 1
+        lat = req.t_finish - req.t_arrive
+        self._lat[req.cls].append(lat)
+        self.completed.append(req)
+        sim.perf["serve_completed"] += 1
+        if lat > self._classes[req.cls].slo_s:
+            sim.perf["serve_slo_miss"] += 1
+        if rep is not None and rep.draining and rep.inflight == 0 \
+                and rep.jr in self.replicas:
+            self._teardown(rep, dirty_nodes)
+
+    # ---------------- replica lifecycle (engine hooks) ---------------------
+    def on_job_start(self, jr) -> None:
+        """``Simulator._on_start`` hook: a scale-up gang was admitted."""
+        rid = self._pending.pop(jr, None)
+        if rid is None:
+            return
+        rep = _Replica(jr, rid)
+        self.replicas[jr] = rep
+        self._consume_holds(jr)
+        sim = self.sim
+        if sim.telemetry is not None:
+            sim.telemetry.emit("scale", sim.now, jr.uid, seq=jr._seq,
+                               event="replica_up",
+                               replicas=len(self.replicas))
+        self._dispatch()
+
+    def on_job_stop(self, jr) -> None:
+        """``Simulator._on_stop`` hook.  The tier's own teardowns remove
+        the replica *before* stopping the gang, so reaching here with a
+        live replica means an external kill (node fault, preemption,
+        drain): its in-flight requests re-queue at the head, and the gang
+        — which the engine re-queues for a restart — goes back to
+        pending so the next ``on_job_start`` re-registers it."""
+        rep = self.replicas.pop(jr, None)
+        if rep is None:
+            return
+        if rep.reqs:
+            reqs = sorted(rep.reqs, key=lambda r: r.t_arrive)
+            for req in reqs:
+                req._ver += 1          # strand the pending completion event
+                req.t_dispatch = None
+                req.service_s = None
+                req.rep = None
+                self._n_inflight -= 1
+            self._requeue_front(reqs)
+            self.sim.perf["serve_requeued"] += len(reqs)
+        self._pending[jr] = rep.rid
+
+    def _teardown(self, rep: _Replica, dirty_nodes: Optional[set],
+                  hold: bool = True) -> None:
+        """Scale-down: release the gang through the engine's shared stop
+        path; optionally stake a ``downscale_hold`` overlay claim on the
+        freed slots."""
+        sim = self.sim
+        jr = rep.jr
+        del self.replicas[jr]
+        sim._sync(jr)
+        jr.finish_t = sim.now
+        jr.remaining = 0.0
+        nodes = dict(jr.nodes_used)
+        sim.done.append(jr)
+        sim._on_stop(jr, dirty_nodes)
+        sim.perf["serve_scale_downs"] += 1
+        if hold and self.cfg.downscale_hold > 0 and nodes:
+            hid = self._hold_seq
+            self._hold_seq += 1
+            self._holds[hid] = nodes
+            heapq.heappush(self._events,
+                           (sim.now + self.cfg.downscale_hold,
+                            self._eseq, _HOLD, hid))
+            self._eseq += 1
+            sim.perf["serve_holds"] += 1
+        if sim.telemetry is not None:
+            sim.telemetry.emit("scale", sim.now, jr.uid, seq=jr._seq,
+                               event="replica_down",
+                               replicas=len(self.replicas))
+
+    # ---------------- reserved-capacity overlay ----------------------------
+    def is_exempt(self, jr) -> bool:
+        """The tier's own scale-ups place *through* the holds (reclaiming
+        the still-warm capacity)."""
+        return jr in self._pending
+
+    def claimed_slots(self) -> Dict[str, int]:
+        """Live scale-down holds, clamped to each node's current free
+        surplus (a node fault can shrink free below the staked amount;
+        the overlay contract is ``reserve <= free``).  Read by the fault
+        engine's regrow planner and the preemption deficit check, the
+        same coordination channel as ``QueueDiscipline.claimed_slots``."""
+        if not self._holds:
+            return {}
+        out: Dict[str, int] = {}
+        for h in self._holds.values():
+            for nm, s in h.items():
+                out[nm] = out.get(nm, 0) + s
+        cluster = self.sim.cluster
+        for nm in list(out):
+            free = cluster.node(nm).free
+            if out[nm] > free:
+                if free <= 0:
+                    del out[nm]
+                else:
+                    out[nm] = free
+        return out
+
+    def merge_overlay(self, jr, reserve: Optional[Dict[str, int]]
+                      ) -> Optional[Dict[str, int]]:
+        """Compose the scale-down holds into a binder's reserve overlay
+        (third overlay writer, after ``faults`` and the discipline)."""
+        if not self._holds or self.is_exempt(jr):
+            return reserve
+        held = self.claimed_slots()
+        if not held:
+            return reserve
+        merged = dict(reserve) if reserve else {}
+        for nm, s in held.items():
+            merged[nm] = merged.get(nm, 0) + s
+        return merged
+
+    def _consume_holds(self, jr) -> None:
+        """A starting replica consumes hold capacity on its nodes (else a
+        reclaimed slot would stay double-booked: used *and* held)."""
+        if not self._holds:
+            return
+        need = dict(jr.nodes_used)
+        perf = self.sim.perf
+        for hid in sorted(self._holds):
+            h = self._holds[hid]
+            for nm in list(h):
+                k = need.get(nm, 0)
+                if k <= 0:
+                    continue
+                take = h[nm] if h[nm] < k else k
+                h[nm] -= take
+                need[nm] = k - take
+                if h[nm] <= 0:
+                    del h[nm]
+            if not h:
+                del self._holds[hid]
+                perf["serve_hold_released"] += 1
+
+    def _expire_hold(self, hid: int) -> None:
+        if self._holds.pop(hid, None) is not None:
+            self.sim.perf["serve_hold_released"] += 1
+
+    # ---------------- autoscaler (control tick) ----------------------------
+    def _prune_pending(self) -> None:
+        """Drop scale-ups the fault engine declared terminally failed
+        (retry budget exhausted) — the next tick re-provisions."""
+        if not self._pending:
+            return
+        failed = set(self.sim.failed)
+        for jr in [j for j in self._pending if j in failed]:
+            del self._pending[jr]
+
+    def _cancel_pending(self, jr) -> bool:
+        sim = self.sim
+        if jr in sim.queue:
+            sim.queue.remove(jr)
+            sim.policy.on_dequeue(jr)
+            del self._pending[jr]
+            return True
+        return False
+
+    def _tick(self, dirty_nodes: Optional[set]) -> None:
+        sim = self.sim
+        now = sim.now
+        cfg = self.cfg
+        self._prune_pending()
+        if self._shutdown:
+            return
+        stream_done = self._arr_idx >= len(self._arrivals)
+        if stream_done and not self._n_queued and not self._n_inflight:
+            self._do_shutdown(dirty_nodes)
+            return
+        if stream_done and self._n_queued and not self.replicas \
+                and not self._pending and not sim.running \
+                and sim.cluster.free_slots < cfg.replica_tasks:
+            # capacity is permanently gone (dead nodes): nothing will ever
+            # serve the tail — drop it explicitly rather than spin forever
+            while True:
+                req = self._pop_next()
+                if req is None:
+                    break
+                self.dropped.append(req)
+                sim.perf["serve_dropped"] += 1
+            self._do_shutdown(dirty_nodes)
+            return
+        demand = self._n_queued + self._n_inflight
+        per = cfg.concurrency * cfg.target_util
+        per = per if per > 1e-9 else 1e-9
+        target = math.ceil(demand / per) if demand else 0
+        if not stream_done:
+            target = max(target, cfg.min_replicas)
+        target = min(target, cfg.max_replicas)
+        live = [rep for rep in sorted(self.replicas.values(),
+                                      key=lambda r: r.rid)
+                if not rep.draining]
+        cur = len(live) + len(self._pending)
+        if target > cur:
+            self._scale_up(target - cur)
+        elif target < cur \
+                and now - self._last_downscale >= cfg.scale_down_cooldown:
+            excess = cur - target
+            # cancel never-started scale-ups first (newest first — the
+            # oldest is closest to the queue head)
+            for jr in sorted(self._pending,
+                             key=lambda j: -self._pending[j]):
+                if excess <= 0:
+                    break
+                if self._cancel_pending(jr):
+                    excess -= 1
+            if excess > 0:
+                # drain the emptiest replicas; ties newest-first
+                victims = sorted(live, key=lambda r: (r.inflight,
+                                                      -r.rid))[:excess]
+                for rep in victims:
+                    rep.draining = True
+                    if rep.inflight == 0 and rep.jr in self.replicas:
+                        self._teardown(rep, dirty_nodes)
+            self._last_downscale = now
+
+    def _scale_up(self, n: int) -> None:
+        sim = self.sim
+        cfg = self.cfg
+        for _ in range(n):
+            rid = self._next_rid
+            self._next_rid += 1
+            name = f"{cfg.service}.{rid}"
+            w = Workload(name, self._profile, cfg.replica_tasks,
+                         _REPLICA_RUNTIME, uid=name, tenant=cfg.tenant,
+                         priority=cfg.replica_priority)
+            sim.submit(w, sim.now)
+            # every discipline's on_submit appends; defend regardless
+            jr = sim.queue[-1]
+            if jr.job is not w:
+                jr = next(j for j in reversed(sim.queue) if j.job is w)
+            self._pending[jr] = rid
+            sim.perf["serve_scale_ups"] += 1
+            if sim.telemetry is not None:
+                sim.telemetry.emit("scale", sim.now, jr.uid, seq=jr._seq,
+                                   event="scale_up",
+                                   pending=len(self._pending))
+
+    def _do_shutdown(self, dirty_nodes: Optional[set]) -> None:
+        """Stream served (or given up): tear everything down so the run
+        drains — no replica, hold, or event outlives the traffic."""
+        self._shutdown = True
+        for jr in list(self._pending):
+            if not self._cancel_pending(jr):
+                del self._pending[jr]
+        for rep in list(self.replicas.values()):
+            self._teardown(rep, dirty_nodes, hold=False)
+        for hid in list(self._holds):
+            self._expire_hold(hid)
+        self._events.clear()
+        self._next_tick = None
+
+    # ---------------- metrics ----------------------------------------------
+    def latency_stats(self) -> Dict[str, dict]:
+        """Per-class latency percentiles + SLO attainment over completed
+        requests — the benchmark's curve points and the per-tenant gauge
+        payload."""
+        out: Dict[str, dict] = {}
+        for name in self._class_order:
+            cls = self._classes[name]
+            lats = sorted(self._lat[name])
+            n = len(lats)
+            if not n:
+                out[name] = {"n": 0, "slo_s": cls.slo_s}
+                continue
+            attained = sum(1 for x in lats if x <= cls.slo_s)
+            out[name] = {"n": n, "slo_s": cls.slo_s,
+                         "mean": sum(lats) / n,
+                         "p50": _pctl(lats, 0.50),
+                         "p95": _pctl(lats, 0.95),
+                         "p99": _pctl(lats, 0.99),
+                         "slo_attainment": attained / n}
+        return out
+
+    def gauge_snapshot(self) -> dict:
+        """Telemetry gauge payload (``Telemetry._sample``)."""
+        if self.cfg.discipline == "slo":
+            depth = {name: len(q) for name, q in self._queues.items() if q}
+        else:
+            depth = {}
+            for r in self._fifo:
+                depth[r.cls] = depth.get(r.cls, 0) + 1
+        held = 0
+        for h in self._holds.values():
+            held += sum(h.values())
+        lat = {}
+        for name in self._class_order:
+            lats = self._lat[name]
+            if not lats:
+                continue
+            s = sorted(lats)
+            cls = self._classes[name]
+            lat[name] = {"p50": _pctl(s, 0.50), "p99": _pctl(s, 0.99),
+                         "slo_attainment": sum(1 for x in s
+                                               if x <= cls.slo_s) / len(s)}
+        return {"queue_by_class": depth, "in_flight": self._n_inflight,
+                "replicas": len(self.replicas),
+                "pending_replicas": len(self._pending),
+                "held_slots": held, "latency": lat}
+
+    def metrics_summary(self) -> dict:
+        """JSON-safe block ``Telemetry.metrics_summary`` embeds."""
+        perf = self.sim.perf
+        return {"requests": int(perf["serve_requests"]),
+                "completed": int(perf["serve_completed"]),
+                "requeued": int(perf["serve_requeued"]),
+                "dropped": int(perf["serve_dropped"]),
+                "scale_ups": int(perf["serve_scale_ups"]),
+                "scale_downs": int(perf["serve_scale_downs"]),
+                "classes": self.latency_stats()}
+
+
+def _pctl(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[idx]

@@ -69,6 +69,7 @@ from repro.core.controller import WorkerSpec
 from repro.core.planner import Granularity, select_granularity
 from repro.core.profiles import MEM_WEIGHT as _MEM_WEIGHT
 from repro.core.profiles import Profile, Workload
+from repro.core import serving as SRV
 from repro.core import taskgroup as TG
 from repro.core import telemetry as TEL
 from repro.core import topology as TPO
@@ -153,6 +154,14 @@ class Scenario:
     # RNG stream is touched, so traces stay byte-identical; with a config
     # present telemetry *observes* only (never perturbs scheduling)
     telemetry: Optional[TEL.TelemetryConfig] = None
+    # online serving tier (repro.core.serving): SLO-classed diurnal
+    # request streams served by autoscaled replica gangs that compete
+    # with the batch queue for the same fleet (scale-up admission goes
+    # through the queue discipline + placement policy; scale-down
+    # returns capacity via the reserved-capacity overlay).  None (the
+    # default) = tier off — every hook is skipped, no request stream is
+    # generated and no RNG is touched, so traces stay byte-identical
+    serving: Optional[SRV.ServingConfig] = None
 
 
 @dataclasses.dataclass(eq=False)         # identity hash: JobRuns live in the
@@ -287,6 +296,8 @@ class Simulator:
         #                                      # (None = injector off)
         self.telemetry = TEL.make_telemetry(self)  # observability layer
         #                                          # (None = layer off)
+        self.serving = SRV.make_serving(self)  # online serving tier
+        #                                      # (None = tier off)
 
     # ---------------- submission -----------------------------------------
     def submit(self, job: Workload, t: float):
@@ -377,6 +388,8 @@ class Simulator:
         self.discipline.on_start(jr)
         if self.faults is not None:
             self.faults.on_start(jr)       # clears the attempt's blacklist
+        if self.serving is not None:
+            self.serving.on_job_start(jr)  # a scale-up gang going live
         if self.telemetry is not None:
             self.telemetry.on_start(jr)    # start record + audit bookmark
         if dirty_nodes is not None:
@@ -418,6 +431,11 @@ class Simulator:
             # and release growth claims (every teardown routes through
             # here — finish, kill, preempt, node-fail, drain)
             self.faults.on_job_stop(jr)
+        if self.serving is not None:
+            # a replica gang killed externally (fault/preempt/drain):
+            # its in-flight requests re-queue (tier-initiated teardowns
+            # deregister first, so this is a no-op for them)
+            self.serving.on_job_stop(jr)
         if dirty_nodes is not None:
             dirty_nodes.update(nodes)
 
@@ -595,14 +613,17 @@ class Simulator:
         t_run = pc()
         flt = self.faults
         tel = self.telemetry
+        srv = self.serving
         idx = 0
         while idx < len(pending) or self.queue or self.running \
-                or (flt is not None and flt.work_pending()):
+                or (flt is not None and flt.work_pending()) \
+                or (srv is not None and srv.work_pending()):
             t0 = pc()
             self.n_events += 1
             if not self.running and idx >= len(pending) and self.queue \
                     and not fails \
-                    and (flt is None or not flt.can_make_progress()):
+                    and (flt is None or not flt.can_make_progress()) \
+                    and (srv is None or not srv.work_pending()):
                 # deadlock: head-of-line gang can never be admitted
                 self.unschedulable.extend(self.queue)
                 self.queue.clear()
@@ -610,11 +631,12 @@ class Simulator:
             next_sub = pending[idx][1] if idx < len(pending) else None
             next_fail = fails[0][0] if fails else None
             next_flt = flt.next_time() if flt is not None else None
+            next_srv = srv.next_time() if srv is not None else None
             while heap and heap[0][3]._ver != heap[0][2]:
                 heapq.heappop(heap)           # drop stale entries
             next_fin = heap[0][0] if heap else None
             t_next = min(x for x in (next_sub, next_fin, next_fail,
-                                     next_flt)
+                                     next_flt, next_srv)
                          if x is not None)
             self.now = t_next
             dirty: set = set()
@@ -655,6 +677,10 @@ class Simulator:
             # drain deadlines, degrade expiries, retry releases)
             if flt is not None:
                 flt.process_due(dirty)
+            # serving-tier events (request arrivals/completions, control
+            # ticks, hold expiries) — scale-ups submit into the queue here
+            if srv is not None:
+                srv.process_due(dirty)
             # submissions
             while idx < len(pending) and pending[idx][1] <= self.now + 1e-12:
                 self.submit(pending[idx][0], pending[idx][1])
@@ -685,26 +711,30 @@ class Simulator:
         t_run = pc()
         flt = self.faults
         tel = self.telemetry
+        srv = self.serving
         idx = 0
         while idx < len(pending) or self.queue or self.running \
-                or (flt is not None and flt.work_pending()):
+                or (flt is not None and flt.work_pending()) \
+                or (srv is not None and srv.work_pending()):
             t0 = pc()
             self.n_events += 1
             if not self.running and idx >= len(pending) and self.queue \
                     and not fails \
-                    and (flt is None or not flt.can_make_progress()):
+                    and (flt is None or not flt.can_make_progress()) \
+                    and (srv is None or not srv.work_pending()):
                 self.unschedulable.extend(self.queue)
                 self.queue.clear()
                 break
             next_sub = pending[idx][1] if idx < len(pending) else None
             next_fail = fails[0][0] if fails else None
             next_flt = flt.next_time() if flt is not None else None
+            next_srv = srv.next_time() if srv is not None else None
             next_fin = None
             if self.running:
                 next_fin = min(self.now + jr.remaining / jr.speed
                                for jr in self.running)
             t_next = min(x for x in (next_sub, next_fin, next_fail,
-                                     next_flt)
+                                     next_flt, next_srv)
                          if x is not None)
             # advance progress
             dt = t_next - self.now
@@ -727,6 +757,8 @@ class Simulator:
                 self._fail_node(node_name, down_for, fails, None)
             if flt is not None:
                 flt.process_due(None)
+            if srv is not None:
+                srv.process_due(None)
             # submissions
             while idx < len(pending) and pending[idx][1] <= self.now + 1e-12:
                 self.submit(pending[idx][0], pending[idx][1])

@@ -105,6 +105,21 @@ COUNTERS: "collections.OrderedDict[str, tuple]" = collections.OrderedDict([
                                "argmax")),
     ("topo_s",          (0.0, "wall time in the traffic registry (nested "
                               "inside admit_s / heap_s)")),
+    # serving-tier counters (all zero with Scenario.serving=None)
+    ("serve_requests",  (0,   "serving requests arrived")),
+    ("serve_completed", (0,   "serving requests completed")),
+    ("serve_slo_miss",  (0,   "completed requests that missed their "
+                              "class latency SLO")),
+    ("serve_requeued",  (0,   "in-flight requests re-queued by a replica "
+                              "kill (fault/preemption)")),
+    ("serve_dropped",   (0,   "requests dropped at shutdown (serving "
+                              "capacity permanently gone)")),
+    ("serve_scale_ups", (0,   "replica gangs submitted by the autoscaler")),
+    ("serve_scale_downs", (0, "replica gangs drained and torn down")),
+    ("serve_holds",     (0,   "scale-down capacity holds staked in the "
+                              "reserved-capacity overlay")),
+    ("serve_hold_released", (0, "scale-down holds released (expiry, "
+                                "scale-up reclaim, or shutdown)")),
 ])
 
 
@@ -128,7 +143,7 @@ def describe_counters() -> Dict[str, str]:
 # processing order at equal time collapses to one canonical stream.
 KINDS: Tuple[str, ...] = ("submit", "admit", "start", "finish", "preempt",
                           "checkpoint", "shrink", "regrow", "fault",
-                          "link_health", "reservation")
+                          "link_health", "reservation", "scale")
 _KIND_RANK = {k: i for i, k in enumerate(KINDS)}
 
 # record kinds that tear down a *running* gang (close its running span):
@@ -331,6 +346,9 @@ class Telemetry:
                 if x > sat.get(level, 0.0):
                     sat[level] = x
             s["link_saturation"] = {k: _finite(v) for k, v in sat.items()}
+        srv = getattr(sim, "serving", None)
+        if srv is not None:
+            s["serving"] = srv.gauge_snapshot()
         self.samples.append(s)
 
     # ---------------- stream access -------------------------------------
@@ -386,6 +404,9 @@ class Telemetry:
         if elapsed > 0:
             out["preempt_waste_rate"] = perf["preempt_wasted_s"] / elapsed
             out["rework_rate"] = perf["rework_s"] / elapsed
+        srv = getattr(self.sim, "serving", None)
+        if srv is not None:
+            out["serving"] = srv.metrics_summary()
         return out
 
     def chrome_trace(self) -> dict:

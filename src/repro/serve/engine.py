@@ -13,8 +13,9 @@ drives end-to-end on CPU with a reduced config.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,27 @@ class Finished:
     tokens: List[int]
 
 
+class EngineIncomplete(RuntimeError):
+    """``run_to_completion`` hit ``max_ticks`` with work still pending.
+
+    The partial results are *not* silently returned: requests still queued
+    or mid-decode would be dropped on the floor.  The exception carries
+    everything the caller needs to decide (drain with more ticks, report,
+    or accept ``finished`` explicitly)."""
+
+    def __init__(self, finished: List[Finished], n_queued: int,
+                 n_in_flight: int, max_ticks: int):
+        self.finished = finished
+        self.n_queued = n_queued
+        self.n_in_flight = n_in_flight
+        self.max_ticks = max_ticks
+        super().__init__(
+            f"engine incomplete after {max_ticks} ticks: "
+            f"{n_queued} request(s) still queued, "
+            f"{n_in_flight} still in flight "
+            f"({len(finished)} finished)")
+
+
 class Engine:
     def __init__(self, cfg, params, batch_slots: int, cache_len: int,
                  ctx: M.Ctx = M.Ctx(), dtype=jnp.float32):
@@ -46,7 +68,7 @@ class Engine:
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_out: List[List[int]] = [[] for _ in range(batch_slots)]
         self.slot_budget = [0] * batch_slots
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = collections.deque()
         self.finished: List[Finished] = []
         self._decode = jax.jit(
             lambda p, t, s: M.decode_step(cfg, p, t, s, ctx))
@@ -77,17 +99,31 @@ class Engine:
         tok = int(jnp.argmax(logits[0]))
         self.cur_tok = self.cur_tok.at[slot].set(tok)
 
+    def _finish_slot(self, slot: int):
+        req = self.slot_req[slot]
+        self.finished.append(Finished(req.uid, self.slot_out[slot]))
+        self.slot_req[slot] = None
+        self.slot_out[slot] = []
+
     def _admit(self):
         for slot in range(self.B):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            logits, pstate = self._prefill(self.params,
-                                           req.prompt[None, :])
-            self._splice_slot(slot, logits, pstate)
-            self.slot_req[slot] = req
-            self.slot_out[slot] = [int(self.cur_tok[slot])]
-            self.slot_budget[slot] = req.max_new_tokens - 1
+            # loop: a request whose budget is exhausted at admit time (or
+            # whose prefill-sampled token is already EOS) finishes
+            # immediately and frees the slot for the next queued request
+            # within the same admit pass.
+            while self.slot_req[slot] is None and self.queue:
+                req = self.queue.popleft()
+                logits, pstate = self._prefill(self.params,
+                                               req.prompt[None, :])
+                self._splice_slot(slot, logits, pstate)
+                self.slot_req[slot] = req
+                tok = int(self.cur_tok[slot])
+                self.slot_out[slot] = [tok]
+                # the prefill-sampled token is the first emitted token, so
+                # only max_new_tokens - 1 decode steps remain.
+                self.slot_budget[slot] = req.max_new_tokens - 1
+                if self.slot_budget[slot] <= 0 or tok == req.eos_id:
+                    self._finish_slot(slot)
 
     def tick(self) -> int:
         """One engine iteration: admit, decode one token for all slots."""
@@ -105,15 +141,16 @@ class Engine:
             self.slot_budget[s] -= 1
             req = self.slot_req[s]
             if self.slot_budget[s] <= 0 or tok == req.eos_id:
-                self.finished.append(Finished(req.uid, self.slot_out[s]))
-                self.slot_req[s] = None
-                self.slot_out[s] = []
+                self._finish_slot(s)
         return len(active)
 
     def run_to_completion(self, max_ticks: int = 10_000) -> List[Finished]:
         ticks = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) \
-                and ticks < max_ticks:
+        while self.queue or any(r is not None for r in self.slot_req):
+            if ticks >= max_ticks:
+                raise EngineIncomplete(
+                    self.finished, len(self.queue),
+                    sum(r is not None for r in self.slot_req), max_ticks)
             self.tick()
             ticks += 1
         return self.finished
